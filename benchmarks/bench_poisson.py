@@ -1,0 +1,78 @@
+"""Paper §8.3 / Figure 5 (right): hierarchical Poisson–gamma model.
+
+Error vs time for the combination strategies on the (log a, log b) posterior,
+including the Gibbs path (criterion 3: ANY sampler per machine — here the
+marginal MH and the latent-q Gibbs sampler mix freely across machines).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, block
+from repro.core import combine, metrics
+from repro.core.subposterior import make_subposterior_logpdf, partition_data
+from repro.models.bayes import poisson_gamma as pg
+from repro.samplers.base import run_chain
+from repro.samplers.rwmh import rwmh_kernel
+
+N, M = 50_000, 10
+
+
+def run(full: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    T = 3000 if full else 1500
+    burn = T // 6
+    key = jax.random.PRNGKey(0)
+    data, theta_true = pg.generate_data(key, N)
+
+    shards = partition_data(data, M)
+
+    def one(i, k):
+        shard = jax.tree.map(lambda x: x[i], shards)
+        logpdf = make_subposterior_logpdf(pg.log_prior, pg.log_lik, shard, M)
+        pos, info = run_chain(
+            k, rwmh_kernel(logpdf, step_size=0.04), theta_true + 0.3, T, burn_in=burn
+        )
+        return pos, info.is_accepted.mean()
+
+    t0 = time.perf_counter()
+    sub, acc = jax.jit(jax.vmap(one))(jnp.arange(M), jax.random.split(key, M))
+    sub = block(sub)
+    t_sub = time.perf_counter() - t0
+
+    logpdf_full = make_subposterior_logpdf(pg.log_prior, pg.log_lik, data, 1)
+    t0 = time.perf_counter()
+    gt, info_gt = jax.jit(
+        lambda k: run_chain(
+            k, rwmh_kernel(logpdf_full, step_size=0.012), theta_true, 3 * T, burn_in=T // 2
+        )
+    )(jax.random.fold_in(key, 5))
+    gt = block(gt)
+    acc_gt = info_gt.is_accepted.mean()
+    t_full = time.perf_counter() - t0
+    rows.append(Row("fig5_poisson", "sampling", "subposterior_time", t_sub, "s",
+                    f"acc={float(acc.mean()):.2f}"))
+    rows.append(Row("fig5_poisson", "sampling", "fullchain_time", t_full, "s",
+                    f"3x samples, acc={float(acc_gt):.2f}"))
+
+    for name, fn in {
+        "parametric": lambda k_: combine.parametric(k_, sub, T).samples,
+        "nonparametric": lambda k_: combine.nonparametric_img(k_, sub, T, rescale=True).samples,
+        "semiparametric": lambda k_: combine.semiparametric_img(k_, sub, T, rescale=True).samples,
+        "subpostAvg": lambda k_: combine.subpost_average(sub),
+        "subpostPool": lambda k_: combine.pool(sub),
+    }.items():
+        samples = block(jax.jit(fn)(jax.random.PRNGKey(3)))
+        rows.append(Row("fig5_poisson", name, "posterior_l2",
+                        float(metrics.l2_distance(gt, samples)), "d2"))
+
+    # posterior-mean error in (log a, log b) against the long chain
+    para = combine.parametric(jax.random.PRNGKey(4), sub, T)
+    rows.append(Row("fig5_poisson", "parametric", "mean_abs_err",
+                    float(jnp.abs(para.samples.mean(0) - gt.mean(0)).max()), "logparam"))
+    return rows

@@ -1,0 +1,43 @@
+"""Roofline table reader — surfaces the dry-run artifacts as benchmark rows.
+
+Reads ``results/dryrun/<mesh>/*.json`` (produced by repro.launch.dryrun) and
+emits the three roofline terms + dominant bottleneck per (arch × shape ×
+mesh). This is deliberately a *reader*: compiling 64 cells belongs to the
+dry-run stage, not the benchmark suite.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List
+
+from benchmarks.common import Row
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run(full: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    if not RESULTS.exists():
+        rows.append(Row("roofline", "missing", "cells", 0, "n",
+                        "run: python -m repro.launch.dryrun"))
+        return rows
+    for mesh_dir in sorted(RESULTS.iterdir()):
+        for f in sorted(mesh_dir.glob("*.json")):
+            rec = json.loads(f.read_text())
+            case = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+            if rec["status"] == "skip":
+                rows.append(Row("roofline", case, "skipped", 1, "flag", rec["reason"][:60]))
+                continue
+            if rec["status"] != "ok":
+                rows.append(Row("roofline", case, "ERROR", 1, "flag", rec.get("error", "")[:60]))
+                continue
+            r = rec["roofline"]
+            rows.append(Row("roofline", case, "compute_ms", r["compute_s"] * 1e3, "ms"))
+            rows.append(Row("roofline", case, "memory_ms", r["memory_s"] * 1e3, "ms"))
+            rows.append(Row("roofline", case, "collective_ms", r["collective_s"] * 1e3, "ms",
+                            f"dominant={r['dominant']}"))
+            if rec.get("useful_flops_ratio"):
+                rows.append(Row("roofline", case, "useful_flops", rec["useful_flops_ratio"], "frac"))
+    return rows

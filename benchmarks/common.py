@@ -1,0 +1,42 @@
+"""Shared benchmark plumbing: timing, row records, CSV emission."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+import jax
+
+
+@dataclasses.dataclass
+class Row:
+    bench: str
+    case: str
+    metric: str
+    value: float
+    units: str
+    extra: str = ""
+
+    def csv(self) -> str:
+        return f"{self.bench},{self.case},{self.metric},{self.value:.6g},{self.units},{self.extra}"
+
+
+HEADER = "bench,case,metric,value,units,extra"
+
+
+def timed(fn: Callable[[], Any], *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time of ``fn`` (which must block, e.g. via block_until_ready)."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def block(x):
+    return jax.block_until_ready(x)

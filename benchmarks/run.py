@@ -1,0 +1,56 @@
+"""Benchmark suite entry point: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick (CPU-sized)
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale chains
+  PYTHONPATH=src python -m benchmarks.run --only fig4_gmm
+
+Emits CSV rows (bench,case,metric,value,units,extra) to stdout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+from benchmarks.common import HEADER
+
+BENCHES = [
+    ("fig1+2_logreg", "benchmarks.bench_logreg"),
+    ("fig3_covtype", "benchmarks.bench_covtype"),
+    ("fig3_dims", "benchmarks.bench_dims"),
+    ("fig4_gmm", "benchmarks.bench_gmm"),
+    ("fig5_poisson", "benchmarks.bench_poisson"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true", help="paper-scale chain lengths")
+    ap.add_argument("--only", default=None, help="substring filter on bench name")
+    args = ap.parse_args(argv)
+
+    print(HEADER)
+    failures = 0
+    for name, module in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(module)
+            rows = mod.run(full=args.full)
+            for row in rows:
+                print(row.csv())
+            print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {name}: FAILED\n{traceback.format_exc()}", file=sys.stderr)
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

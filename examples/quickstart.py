@@ -1,0 +1,60 @@
+"""Quickstart: the whole paper in ~60 lines.
+
+Partition data onto M "machines", sample each subposterior independently
+(zero communication), combine with all three estimators, and check against
+the closed-form posterior of a linear-Gaussian model.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import combine
+from repro.core.subposterior import make_subposterior_logpdf, partition_data
+from repro.models.bayes import linear_gaussian as lg
+from repro.samplers.base import run_chain
+from repro.samplers.rwmh import rwmh_kernel
+
+M, T, D, N = 8, 2000, 4, 4096
+
+key = jax.random.PRNGKey(0)
+data, theta_true = lg.generate_data(key, N, D)
+posterior = lg.posterior_moments(data)  # closed form — our exam answer key
+print(f"true posterior mean: {posterior.mean}")
+
+# -- step 1: partition the data onto M machines -----------------------------
+shards = partition_data(data, M)
+
+# -- step 2: each machine samples its subposterior (Eq 2.1), independently --
+def sample_machine(m, k):
+    shard = jax.tree.map(lambda x: x[m], shards)
+    logpdf = make_subposterior_logpdf(lg.log_prior, lg.log_lik, shard, M)
+    samples, info = run_chain(
+        k, rwmh_kernel(logpdf, step_size=0.08), jnp.zeros(D), T, burn_in=T // 6
+    )
+    return samples, info.is_accepted.mean()
+
+keys = jax.random.split(jax.random.fold_in(key, 1), M)
+subposterior_samples, acc = jax.jit(jax.vmap(sample_machine))(jnp.arange(M), keys)
+print(f"sampled {M} subposteriors in parallel (mean acceptance {float(acc.mean()):.2f})")
+
+# -- step 3: combine (the only communicating stage) --------------------------
+for name, fn in {
+    "parametric     (§3.1)": lambda k: combine.parametric(k, subposterior_samples, T),
+    "nonparametric  (§3.2)": lambda k: combine.nonparametric_img(
+        k, subposterior_samples, T, rescale=True
+    ),
+    "semiparametric (§3.3)": lambda k: combine.semiparametric_img(
+        k, subposterior_samples, T, rescale=True
+    ),
+}.items():
+    result = jax.jit(fn)(jax.random.PRNGKey(2))
+    err = float(jnp.linalg.norm(result.samples.mean(0) - posterior.mean))
+    print(f"{name}: |combined mean − true mean| = {err:.4f} "
+          f"(IMG acceptance {float(result.acceptance_rate):.2f})")
+
+# the wrong thing to do, for contrast (paper Fig 1):
+avg = combine.subpost_average(subposterior_samples)
+print(f"subpostAvg baseline:  |avg mean − true mean| = "
+      f"{float(jnp.linalg.norm(avg.mean(0) - posterior.mean)):.4f}")

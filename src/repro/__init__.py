@@ -1,0 +1,14 @@
+"""repro — production-grade JAX framework for Asymptotically Exact,
+Embarrassingly Parallel MCMC (Neiswanger, Wang & Xing, 2013).
+
+Layers
+------
+- ``repro.core``        the paper's contribution: subposteriors + combination
+- ``repro.samplers``    any-MCMC substrate (RWMH/MALA/HMC/NUTS/Gibbs/SGLD)
+- ``repro.models``      Bayesian experiment models + assigned LM architecture zoo
+- ``repro.distributed`` shard_map EP-MCMC runtime, sharding policies
+- ``repro.kernels``     Pallas TPU kernels for the numeric hot spots
+- ``repro.launch``      mesh / dryrun / train / serve / mcmc_run entry points
+"""
+
+__version__ = "1.0.0"

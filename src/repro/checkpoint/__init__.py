@@ -1,0 +1,15 @@
+from repro.checkpoint.checkpointer import (
+    Checkpointer,
+    latest_step,
+    restore,
+    restore_elastic_chains,
+    save,
+)
+
+__all__ = [
+    "Checkpointer",
+    "save",
+    "restore",
+    "restore_elastic_chains",
+    "latest_step",
+]

@@ -1,0 +1,251 @@
+"""Sharded, atomic, elastic checkpointing (no external deps).
+
+Layout (one directory per step)::
+
+    <root>/step_000100/
+        MANIFEST.json        # treedef, per-leaf shape/dtype/file, metadata
+        host_00000/
+            leaf_00000.npy   # one .npy per leaf owned by this host
+            ...
+    <root>/step_000100.tmp/  # staging dir; atomic os.replace on commit
+
+Multi-host discipline (the part that matters at 1000+ nodes):
+- every host writes ONLY its addressable shard bytes under ``host_<id>/``
+  (here: process 0 owns everything — the layout is already per-host so a real
+  multi-controller run changes the writer set, not the format);
+- host 0 writes the manifest LAST, after all data files exist — a manifest's
+  presence is the commit record; readers ignore step dirs without one;
+- ``os.replace`` of the staging dir makes the commit atomic on POSIX — a
+  crash mid-write leaves only ``.tmp`` litter that the next writer clears.
+
+Async: ``Checkpointer(async_io=True)`` moves serialization+IO to a worker
+thread; training only blocks on the previous write when a new one starts
+(double-buffering, the standard overlap trick).
+
+Elastic EP-MCMC restore (:func:`restore_elastic_chains`): chain-stacked state
+``(C_old, ...)`` re-partitioned to ``C_new`` chains. Shrink keeps the first
+``C_new`` chains (their subposterior targets change only through the prior
+exponent 1/M, which is a step-function argument, not state); grow tiles
+existing chains with fresh RNG folds. Retained streaming moments stay valid
+for the chains that survive — the paper's footnote-1 ragged-T property is
+what makes elasticity sound.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import shutil
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+def _step_dir(root: pathlib.Path, step: int) -> pathlib.Path:
+    return root / f"step_{step:09d}"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(
+    root: str | os.PathLike,
+    step: int,
+    tree: PyTree,
+    *,
+    metadata: Optional[Dict[str, Any]] = None,
+    host_id: int = 0,
+    keep: int = 3,
+) -> pathlib.Path:
+    """Write one checkpoint synchronously; returns the committed directory."""
+    root = pathlib.Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    final = _step_dir(root, step)
+    tmp = final.with_suffix(".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)  # crash litter from a previous writer
+    host_dir = tmp / f"host_{host_id:05d}"
+    host_dir.mkdir(parents=True)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves: List[Dict[str, Any]] = []
+    for i, (path, leaf) in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(host_dir / fname, arr)
+        leaves.append(
+            {
+                "index": i,
+                "path": _path_str(path),
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "file": f"host_{host_id:05d}/{fname}",
+            }
+        )
+    try:  # best-effort structural fingerprint (NamedTuple nodes don't proto-serialize)
+        treedef_hex = jax.tree_util.tree_structure(tree).serialize_using_proto().hex()
+    except Exception:
+        treedef_hex = None
+    manifest = {
+        "step": step,
+        "format": 1,
+        "num_hosts": 1,
+        "treedef": treedef_hex,
+        "leaves": leaves,
+        "metadata": metadata or {},
+    }
+    # manifest last = commit record
+    (tmp / "MANIFEST.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _apply_retention(root, keep)
+    return final
+
+
+def _apply_retention(root: pathlib.Path, keep: int) -> None:
+    steps = sorted(
+        int(m.group(1)) for p in root.iterdir() if (m := _STEP_RE.match(p.name))
+    )
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(_step_dir(root, s), ignore_errors=True)
+
+
+def latest_step(root: str | os.PathLike) -> Optional[int]:
+    root = pathlib.Path(root)
+    if not root.exists():
+        return None
+    steps = [
+        int(m.group(1))
+        for p in root.iterdir()
+        if (m := _STEP_RE.match(p.name)) and (p / "MANIFEST.json").exists()
+    ]
+    return max(steps) if steps else None
+
+
+def restore(
+    root: str | os.PathLike,
+    *,
+    step: Optional[int] = None,
+    template: Optional[PyTree] = None,
+) -> Tuple[PyTree, Dict[str, Any]]:
+    """Load a checkpoint. With ``template``, leaves are matched by tree order
+    and cast/reshaped onto the template's structure (the normal jit-restart
+    path); without, returns (leaves-by-path dict, metadata)."""
+    root = pathlib.Path(root)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints under {root}")
+    d = _step_dir(root, step)
+    manifest = json.loads((d / "MANIFEST.json").read_text())
+    arrays = [np.load(d / leaf["file"]) for leaf in manifest["leaves"]]
+    if template is not None:
+        flat, treedef = jax.tree_util.tree_flatten(template)
+        if len(flat) != len(arrays):
+            raise ValueError(
+                f"checkpoint has {len(arrays)} leaves, template {len(flat)}"
+            )
+        cast = [
+            jnp.asarray(a, dtype=t.dtype) if hasattr(t, "dtype") else jnp.asarray(a)
+            for a, t in zip(arrays, flat)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, cast), manifest["metadata"]
+    by_path = {leaf["path"]: arr for leaf, arr in zip(manifest["leaves"], arrays)}
+    return by_path, manifest["metadata"]
+
+
+def restore_elastic_chains(
+    root: str | os.PathLike,
+    template: PyTree,
+    new_num_chains: int,
+    *,
+    step: Optional[int] = None,
+    chain_axis: int = 0,
+    rng_bump: int = 104729,
+) -> Tuple[PyTree, Dict[str, Any]]:
+    """Restore chain-stacked EP-MCMC state onto a different chain count.
+
+    Every leaf whose dim-``chain_axis`` equals the checkpointed chain count is
+    re-partitioned: shrink → slice, grow → wrap-around tile. Scalar/other
+    leaves pass through. The caller owns re-partitioning the *data* (pure
+    function of shard index) and using the new 1/M in the step function.
+    """
+    tree, meta = restore(root, step=step, template=None)
+    old_c = meta.get("num_chains")
+    if old_c is None:
+        raise ValueError("checkpoint metadata lacks 'num_chains'")
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    by_path = tree  # path -> np.ndarray
+    out = []
+    for path, t_leaf in flat_t:
+        key = _path_str(path)
+        if key not in by_path:
+            raise KeyError(f"leaf {key!r} missing from checkpoint")
+        arr = by_path[key]
+        if arr.ndim > chain_axis and arr.shape[chain_axis] == old_c != new_num_chains:
+            if new_num_chains < old_c:
+                arr = np.take(arr, np.arange(new_num_chains), axis=chain_axis)
+            else:
+                idx = np.arange(new_num_chains) % old_c
+                arr = np.take(arr, idx, axis=chain_axis)
+                if "key" in key.split("/")[-1]:  # de-duplicate RNG streams
+                    bump = (np.arange(new_num_chains) // old_c).astype(arr.dtype)
+                    arr = arr + (bump * rng_bump)[(...,) + (None,) * (arr.ndim - 1)].swapaxes(0, chain_axis)
+        out.append(jnp.asarray(arr, dtype=getattr(t_leaf, "dtype", None)))
+    meta = dict(meta, num_chains=new_num_chains, elastic_from=old_c)
+    return jax.tree_util.tree_unflatten(treedef, out), meta
+
+
+class Checkpointer:
+    """Double-buffered async wrapper around :func:`save`."""
+
+    def __init__(self, root: str | os.PathLike, *, keep: int = 3, async_io: bool = True):
+        self.root = pathlib.Path(root)
+        self.keep = keep
+        self._pool = ThreadPoolExecutor(max_workers=1) if async_io else None
+        self._pending: Optional[Future] = None
+        self._lock = threading.Lock()
+
+    def save(self, step: int, tree: PyTree, *, metadata=None) -> None:
+        # materialize on host NOW (donated/mutating buffers must not race IO)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self._pool is None:
+            save(self.root, step, host_tree, metadata=metadata, keep=self.keep)
+            return
+        with self._lock:
+            if self._pending is not None:
+                self._pending.result()  # block on the previous write only
+            self._pending = self._pool.submit(
+                save, self.root, step, host_tree, metadata=metadata, keep=self.keep
+            )
+
+    def wait(self) -> None:
+        with self._lock:
+            if self._pending is not None:
+                self._pending.result()
+                self._pending = None
+
+    def close(self) -> None:
+        self.wait()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)

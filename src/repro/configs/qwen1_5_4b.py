@@ -1,0 +1,19 @@
+"""qwen1.5-4b [dense] — QKV bias (hf:Qwen/Qwen1.5-0.5B family; hf).
+
+40L d_model=2560 20H (GQA kv=20 ⇒ MHA) d_ff=6912 vocab=151936.
+"""
+
+from repro.models.lm.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    num_layers=40,
+    d_model=2560,
+    num_heads=20,
+    num_kv_heads=20,
+    head_dim=128,
+    d_ff=6912,
+    vocab_size=151_936,
+    qkv_bias=True,
+)

@@ -1,0 +1,102 @@
+"""Pairwise-recursive combination — paper §3.2 (end) and §4.
+
+Applying the IMG combiner to pairs of subposteriors, then to pairs of the
+resulting sample sets, and so on, reduces total work to O(dTM) and markedly
+improves IMG acceptance (with M̃=2 the proposal perturbs half the component).
+
+Samples emitted by a pair's combiner are (asymptotically) draws from
+``p_a · p_b`` — exactly the subposterior of the merged shard (its prior weight
+``2/M`` is the sum of the pair's) — so recursion is closed: round k operates on
+M/2^k sample sets, all still "subposterior samples" in the paper's sense.
+
+All pairs in a round are combined with one ``vmap`` — on the production mesh
+this is what the data-axis tree reduction lowers to (log₂ M rounds of
+neighbour ``collective-permute`` + local combine; see
+``repro.distributed.epmcmc``).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import combine as cmb
+
+
+def _combine_pairs(
+    key: jax.Array,
+    pairs: jnp.ndarray,  # (P, 2, T, d)
+    counts: jnp.ndarray,  # (P, 2)
+    n_draws: int,
+    method: str,
+    rescale: bool,
+) -> jnp.ndarray:
+    def one(key, pair, cnt):
+        if method == "nonparametric":
+            res = cmb.nonparametric_img(key, pair, n_draws, counts=cnt, rescale=rescale)
+        elif method == "semiparametric":
+            res = cmb.semiparametric_img(key, pair, n_draws, counts=cnt, rescale=rescale)
+        elif method == "parametric":
+            res = cmb.parametric(key, pair, n_draws, counts=cnt)
+        else:
+            raise ValueError(f"unknown method {method!r}")
+        return res.samples
+
+    keys = jax.random.split(key, pairs.shape[0])
+    return jax.vmap(one)(keys, pairs, counts)
+
+
+def tree_combine(
+    key: jax.Array,
+    samples: jnp.ndarray,
+    n_draws: int,
+    *,
+    counts: Optional[jnp.ndarray] = None,
+    method: str = "nonparametric",
+    rescale: bool = False,
+) -> cmb.CombineResult:
+    """Combine ``(M, T, d)`` subposterior samples pairwise until one set remains.
+
+    Odd set counts pass the last set through unchanged (paper §3.2). Output has
+    ``n_draws`` samples. O(dTM) total work across all rounds.
+    """
+    M, T, d = samples.shape
+    counts = (
+        jnp.full((M,), T, dtype=jnp.int32) if counts is None else counts.astype(jnp.int32)
+    )
+
+    level = samples
+    level_counts = counts
+    while level.shape[0] > 1:
+        m = level.shape[0]
+        n_pairs = m // 2
+        odd = m % 2 == 1
+        paired = level[: 2 * n_pairs].reshape(n_pairs, 2, level.shape[1], d)
+        paired_counts = level_counts[: 2 * n_pairs].reshape(n_pairs, 2)
+        key, sub = jax.random.split(key)
+        out_t = n_draws if n_pairs * 2 == m and not odd and n_pairs == 1 else level.shape[1]
+        combined = _combine_pairs(sub, paired, paired_counts, out_t, method, rescale)
+        new_counts = jnp.full((n_pairs,), out_t, dtype=jnp.int32)
+        if odd:
+            # Carry the unpaired set through; pad draws count to match if needed.
+            leftover = level[-1:]
+            leftover_counts = level_counts[-1:]
+            if leftover.shape[1] != combined.shape[1]:
+                pad_t = combined.shape[1]
+                idx = jnp.arange(pad_t)[None, :] % jnp.maximum(leftover_counts[:, None], 1)
+                leftover = jnp.take_along_axis(leftover, idx[:, :, None], axis=1)
+                leftover_counts = jnp.minimum(leftover_counts, pad_t)
+            level = jnp.concatenate([combined, leftover], axis=0)
+            level_counts = jnp.concatenate([new_counts, leftover_counts], axis=0)
+        else:
+            level = combined
+            level_counts = new_counts
+
+    out = level[0]
+    if out.shape[0] != n_draws:
+        # Final level came from a passthrough with T != n_draws: resample rows.
+        idx = jnp.arange(n_draws) % out.shape[0]
+        out = out[idx]
+    return cmb.CombineResult(samples=out, acceptance_rate=jnp.ones(()), moments=None)

@@ -1,0 +1,3 @@
+"""Data pipelines: deterministic synthetic token streams + Bayes generators."""
+
+from repro.data.tokens import TokenStream, make_batch_specs  # noqa: F401

@@ -1,0 +1,3 @@
+"""Distributed runtime: sharding policies, EP-MCMC shard_map chains."""
+
+from repro.distributed import sharding as sharding  # noqa: F401

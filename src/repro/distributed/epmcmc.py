@@ -1,0 +1,468 @@
+"""EP-MCMC on the mesh — the paper's algorithm as a first-class training mode.
+
+The mapping (DESIGN.md §3): the mesh's ``data`` axis (× ``pod`` on multi-pod)
+hosts **M independent subposterior chains**. Chain c owns
+
+- its own parameter state θ_c (pytree stacked on a leading chain axis,
+  sharded ``P('data', <TP spec>)``),
+- a disjoint data shard (the paper's partition),
+- an independent RNG stream.
+
+The SGLD transition on chain c targets the subposterior (paper Eq. 2.1)
+
+    log p_c(θ) = (1/M)·log p(θ) + (N_c/B)·Σ_{i∈batch} log p(x_i|θ)
+
+Because the chain axis is *vmapped* (no op ever mixes chains), GSPMD lowers
+the whole sampling step with **zero collectives across the data/pod axes** —
+the paper's "embarrassingly parallel" claim, checkable in the HLO
+(:func:`assert_no_cross_chain_collectives`, exercised by tests and the
+dry-run). The ``model`` axis still carries ordinary TP collectives *within*
+a chain. Compare ``--mode sgd``: identical step, but gradients are averaged
+over chains (psum over data axes) every step — the communication the paper
+deletes.
+
+Combination (§3) communicates once at the end:
+- parametric, full θ (BvM regime): per-chain diagonal running moments →
+  ``product_moments_diag`` over the chain axis — a single O(d) reduce.
+- exact combiners (nonparametric/semiparametric IMG): run on a designated
+  low-dim parameter *subset* (or summary) — all-gather of (M, T, d_sub).
+"""
+
+from __future__ import annotations
+
+import functools
+import re
+from typing import Any, Callable, Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.gaussian import GaussianMoments, product_moments_diag
+from repro.distributed import sharding as shd
+from repro.models.lm import model as mdl
+from repro.models.lm import steps
+from repro.models.lm.config import ModelConfig
+
+PyTree = Any
+
+PRIOR_SIGMA = 1.0  # N(0, σ²) prior over every weight — BvM-regime reference prior
+
+
+class EpmcmcState(NamedTuple):
+    """State of M parallel subposterior SGLD chains (+ streaming moments)."""
+
+    params: PyTree  # (C, ...) stacked chain parameters
+    v: PyTree  # (C, ...) RMSProp preconditioner accumulators
+    step: jnp.ndarray  # () int32
+    key: jax.Array  # (C, 2) per-chain RNG
+    # streaming diagonal moments of the post-burn-in samples, per chain:
+    m_count: jnp.ndarray  # (C,)
+    m_mean: PyTree  # (C, ...) running mean of θ samples
+    m_var: PyTree  # (C, ...) running Σ(θ−mean)² (Welford)
+
+
+def num_chains(mesh: Mesh) -> int:
+    return int(
+        mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+        if "data" in mesh.shape
+        else 1
+    )
+
+
+def init_state(key: jax.Array, cfg: ModelConfig, n_chains: int) -> EpmcmcState:
+    """vmapped per-chain init — every chain starts at a different draw
+    (overdispersed starts parallelize burn-in diagnostics)."""
+    keys = jax.random.split(key, n_chains)
+    params = jax.vmap(lambda k: mdl.init_params(k, cfg))(keys)
+    zeros_like_f32 = lambda t: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t
+    )
+    return EpmcmcState(
+        params=params,
+        v=zeros_like_f32(params),
+        step=jnp.zeros((), jnp.int32),
+        key=jax.vmap(jax.random.fold_in)(keys, jnp.arange(n_chains)),
+        m_count=jnp.zeros((n_chains,), jnp.float32),
+        m_mean=zeros_like_f32(params),
+        m_var=zeros_like_f32(params),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sharding
+# ---------------------------------------------------------------------------
+
+
+def chain_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return shd.batch_axes(mesh)  # ('pod','data') / ('data',)
+
+
+def _prepend_chain_axis(spec: P, axes: Tuple[str, ...]) -> P:
+    return P(axes, *tuple(spec))
+
+
+def state_specs(cfg: ModelConfig, mesh: Mesh, state: EpmcmcState) -> EpmcmcState:
+    """PartitionSpecs: chain axis over data(/pod); TP spec per chain inside.
+
+    Reuses :func:`repro.distributed.sharding.param_spec` — stacked leaves have
+    one extra leading dim, which the path rules emit as a leading ``None``;
+    we overwrite it with the chain axes. FSDP is force-disabled: the data
+    axis belongs to the chains (each chain's state is TP-sharded only —
+    ZeRO-style sharding would put 'data' on a second dim of the same leaf).
+    """
+    import dataclasses as _dc
+
+    ca = chain_axes(mesh)
+    cfg_tp = _dc.replace(cfg, fsdp=False)
+
+    def stacked_specs(tree: PyTree) -> PyTree:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        out = []
+        for path, leaf in flat:
+            # spec of the UNSTACKED per-chain leaf (path rules are written
+            # against per-chain shapes), then prepend the chain axis
+            unstacked = jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype)
+            spec = shd.param_spec(cfg_tp, mesh, shd._path_str(path), unstacked)
+            parts = list(spec) + [None] * (len(unstacked.shape) - len(spec))
+            out.append(P(ca, *parts))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    pspec = stacked_specs(state.params)
+    return EpmcmcState(
+        params=pspec,
+        v=pspec,
+        step=P(),
+        key=P(ca, None),
+        m_count=P(ca),
+        m_mean=pspec,
+        m_var=pspec,
+    )
+
+
+def batch_spec(mesh: Mesh, batch: PyTree) -> PyTree:
+    """EP-MCMC batches are (C, b, ...) — chain axis sharded, rest local."""
+    ca = chain_axes(mesh)
+    return jax.tree.map(lambda l: P(ca, *([None] * (l.ndim - 1))), batch)
+
+
+# ---------------------------------------------------------------------------
+# the SGLD subposterior step (one transition of every chain, in parallel)
+# ---------------------------------------------------------------------------
+
+
+def _subposterior_neg_logpost(
+    params: PyTree,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    num_shards: int,
+    shard_tokens: float,
+) -> jnp.ndarray:
+    """−log p_c(θ) up to a constant, for ONE chain (vmapped by the caller).
+
+    CE is mean/token, so ``shard_tokens × CE`` is −log-lik of the whole shard
+    (the N_c/B unbiased scaling); the Gaussian prior enters with weight 1/M
+    (paper Eq. 2.1's underweighted prior).
+    """
+    total, _metrics = steps.loss_fn(params, cfg, batch)
+    neg_loglik = shard_tokens * total
+    sq = sum(
+        jnp.sum(jnp.square(p.astype(jnp.float32))) for p in jax.tree.leaves(params)
+    )
+    neg_logprior = sq / (2.0 * PRIOR_SIGMA**2)
+    return neg_loglik + neg_logprior / num_shards
+
+
+def epmcmc_step(
+    state: EpmcmcState,
+    batch: Dict[str, jnp.ndarray],  # (C, b, ...) — one sub-batch per chain
+    cfg: ModelConfig,
+    *,
+    num_shards: int,
+    shard_tokens: float,
+    step_size: float = 1e-6,
+    rmsprop_decay: float = 0.99,
+    rmsprop_eps: float = 1e-4,
+    temperature: float = 1.0,
+    burn_in: int = 0,
+) -> Tuple[EpmcmcState, Dict[str, jnp.ndarray]]:
+    """One pSGLD transition of all chains + streaming-moment update.
+
+    ``temperature=0`` turns the transition into preconditioned SGD *per
+    chain* — still embarrassingly parallel. The synchronous baseline lives in
+    :func:`sgd_baseline_step`.
+    """
+
+    def one_chain(params, v, key, batch_c):
+        nlp = functools.partial(
+            _subposterior_neg_logpost,
+            cfg=cfg,
+            num_shards=num_shards,
+            shard_tokens=shard_tokens,
+        )
+        loss, grads = jax.value_and_grad(lambda p: nlp(p, batch=batch_c))(params)
+        # pSGLD: G = 1/(√v̂ + ε);  θ += −(ε/2)·G·∇nlp + √(ε·G·T)·ξ
+        v_new = jax.tree.map(
+            lambda vi, g: rmsprop_decay * vi
+            + (1 - rmsprop_decay) * jnp.square(g.astype(jnp.float32)),
+            v,
+            grads,
+        )
+        key, knoise = jax.random.split(key)
+        leaves, treedef = jax.tree.flatten(params)
+        nkeys = jax.tree.unflatten(
+            treedef, list(jax.random.split(knoise, len(leaves)))
+        )
+
+        def upd(p, g, vi, nk):
+            G = 1.0 / (jnp.sqrt(vi) + rmsprop_eps)
+            drift = -0.5 * step_size * G * g.astype(jnp.float32)
+            noise = jnp.sqrt(step_size * G * temperature) * jax.random.normal(
+                nk, p.shape, jnp.float32
+            )
+            return (p.astype(jnp.float32) + drift + noise).astype(p.dtype)
+
+        params_new = jax.tree.map(upd, params, grads, v_new, nkeys)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        return params_new, v_new, key, loss, gnorm
+
+    p_new, v_new, k_new, losses, gnorms = jax.vmap(one_chain)(
+        state.params, state.v, state.key, batch
+    )
+    # NB: metrics stay PER-CHAIN — even a scalar jnp.mean over the chain axis
+    # would lower to a cross-chain all-reduce and break the zero-communication
+    # property this mode exists to demonstrate. Average on the host if needed.
+
+    # Streaming Welford moments, masked until burn-in completes. This is the
+    # paper's §4 "online" combiner state: O(d) per chain, no samples stored.
+    take = (state.step >= burn_in).astype(jnp.float32)
+    n_new = state.m_count + take
+    denom = jnp.maximum(n_new, 1.0)
+
+    def welford(mean, var, p):
+        p32 = p.astype(jnp.float32)
+        bshape = (-1,) + (1,) * (p.ndim - 1)
+        delta = p32 - mean
+        mean_new = mean + (take.reshape(bshape) * delta) / denom.reshape(bshape)
+        var_new = var + take.reshape(bshape) * delta * (p32 - mean_new)
+        return mean_new, var_new
+
+    flat_mean, treedef = jax.tree.flatten(state.m_mean)
+    flat_var = jax.tree.leaves(state.m_var)
+    flat_p = jax.tree.leaves(p_new)
+    new_mean, new_var = [], []
+    for mn, vr, p in zip(flat_mean, flat_var, flat_p):
+        a, b = welford(mn, vr, p)
+        new_mean.append(a)
+        new_var.append(b)
+
+    new_state = EpmcmcState(
+        params=p_new,
+        v=v_new,
+        step=state.step + 1,
+        key=k_new,
+        m_count=n_new,
+        m_mean=jax.tree.unflatten(treedef, new_mean),
+        m_var=jax.tree.unflatten(treedef, new_var),
+    )
+    metrics = {"loss_per_chain": losses, "gnorm_per_chain": gnorms}
+    return new_state, metrics
+
+
+def sgd_baseline_step(
+    state: EpmcmcState,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    num_shards: int,
+    shard_tokens: float,
+    step_size: float = 1e-6,
+    rmsprop_decay: float = 0.99,
+    rmsprop_eps: float = 1e-4,
+) -> Tuple[EpmcmcState, Dict[str, jnp.ndarray]]:
+    """The synchronous strawman: same per-chain gradient, then *averaged
+    across chains* (a data-axis psum — the collective EP-MCMC eliminates).
+    Used by the dry-run to quantify the paper's deleted collective bytes."""
+
+    def one_chain_grad(params, batch_c):
+        nlp = functools.partial(
+            _subposterior_neg_logpost,
+            cfg=cfg,
+            num_shards=num_shards,
+            shard_tokens=shard_tokens,
+        )
+        return jax.value_and_grad(lambda p: nlp(p, batch=batch_c))(params)
+
+    losses, grads = jax.vmap(one_chain_grad)(state.params, batch)
+    # gradient averaging over the chain axis == DP all-reduce under GSPMD
+    grads = jax.tree.map(lambda g: jnp.mean(g, axis=0, keepdims=True), grads)
+    grads = jax.tree.map(
+        lambda g, p: jnp.broadcast_to(g, p.shape), grads, state.params
+    )
+
+    def upd(p, g, v):
+        v_new = rmsprop_decay * v + (1 - rmsprop_decay) * jnp.square(
+            g.astype(jnp.float32)
+        )
+        G = 1.0 / (jnp.sqrt(v_new) + rmsprop_eps)
+        return (p.astype(jnp.float32) - 0.5 * step_size * G * g.astype(jnp.float32)).astype(
+            p.dtype
+        ), v_new
+
+    flat_p, treedef = jax.tree.flatten(state.params)
+    outs = [
+        upd(p, g, v)
+        for p, g, v in zip(flat_p, jax.tree.leaves(grads), jax.tree.leaves(state.v))
+    ]
+    p_new = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    v_new = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_state = state._replace(params=p_new, v=v_new, step=state.step + 1)
+    return new_state, {"loss_per_chain": losses}
+
+
+# ---------------------------------------------------------------------------
+# combination (the single communicating stage)
+# ---------------------------------------------------------------------------
+
+
+def combine_parametric_diag(state: EpmcmcState) -> GaussianMoments:
+    """Full-θ parametric product (Eqs 3.1–3.2, diagonal/BvM form) from the
+    streaming moments. Per-leaf; the reduce over the chain axis is the only
+    cross-chain communication in the entire run (O(d) scalars)."""
+
+    counts = jnp.maximum(state.m_count - 1.0, 1.0)
+
+    def product(mean, var):
+        C = mean.shape[0]
+        cshape = (C,) + (1,) * (mean.ndim - 1)
+        v = var / counts.reshape(cshape) + 1e-12
+        flat_mean = mean.reshape(C, -1)
+        flat_var = v.reshape(C, -1)
+        mom = product_moments_diag(flat_mean, flat_var)
+        return mom.mean.reshape(mean.shape[1:]), mom.cov.reshape(mean.shape[1:])
+
+    means, variances = {}, {}
+    flat, treedef = jax.tree_util.tree_flatten(state.m_mean)
+    flat_v = jax.tree.leaves(state.m_var)
+    out_m, out_v = [], []
+    for mn, vr in zip(flat, flat_v):
+        a, b = product(mn, vr)
+        out_m.append(a)
+        out_v.append(b)
+    return GaussianMoments(
+        mean=jax.tree.unflatten(treedef, out_m), cov=jax.tree.unflatten(treedef, out_v)
+    )
+
+
+def gather_subset_samples(
+    params: PyTree, paths: Sequence[str] | None = None
+) -> jnp.ndarray:
+    """Flatten a designated low-dim θ subset per chain → (C, d_sub), ready for
+    the exact (IMG) combiners. Default subset: final-norm scale (tiny, present
+    in every arch)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    sel = []
+    for path, leaf in flat:
+        name = shd._path_str(path)
+        if paths is None:
+            if "final_norm" in name:
+                sel.append(leaf)
+        elif any(re.search(p, name) for p in paths):
+            sel.append(leaf)
+    if not sel:
+        raise ValueError("subset selector matched no parameters")
+    C = sel[0].shape[0]
+    return jnp.concatenate([s.reshape(C, -1).astype(jnp.float32) for s in sel], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# HLO assertions: the "embarrassingly parallel" proof
+# ---------------------------------------------------------------------------
+
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^=]*?\})\}")
+# NB: the output type may be a (multi-line-wide) tuple, so match the op-kind
+# token directly rather than anchoring on '= <type>'.
+_COLLECTIVE_LINE_RE = re.compile(
+    r"\s(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_PAIRS_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
+
+
+_IOTA_GROUPS_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?"
+)
+
+
+def _iota_groups(ng: int, gs: int, dims, perm) -> list:
+    """Decode the iota-v2 replica_groups format: [NG,GS]<=[dims]T(perm)."""
+    import numpy as np
+
+    total = 1
+    for d in dims:
+        total *= d
+    ids = np.arange(total).reshape(dims)
+    if perm is not None:
+        ids = ids.transpose(perm)
+    return ids.reshape(ng, gs).tolist()
+
+
+def collective_groups(hlo_text: str) -> list:
+    """Extract (kind, groups) for every collective in the HLO.
+
+    Handles the explicit ``{{0,1},{2,3}}`` form, the iota-v2 form
+    ``[NG,GS]<=[dims]T(perm)`` and collective-permute source/target pairs."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_LINE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        groups = []
+        im = _IOTA_GROUPS_RE.search(line)
+        if im:
+            dims = [int(x) for x in im.group(3).split(",")]
+            perm = [int(x) for x in im.group(4).split(",")] if im.group(4) else None
+            groups = _iota_groups(int(im.group(1)), int(im.group(2)), dims, perm)
+        else:
+            gm = _REPLICA_GROUPS_RE.search(line)
+            if gm:
+                for grp in re.findall(r"\{([0-9,\s]*)\}", gm.group(1)):
+                    ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+                    if ids:
+                        groups.append(ids)
+        pm = _PAIRS_RE.search(line)
+        if pm:
+            pairs = [
+                tuple(int(x) for x in p.split(","))
+                for p in re.findall(r"\{([0-9,\s]*)\}", pm.group(1))
+            ]
+            groups = [list(p) for p in pairs]
+        out.append((kind, groups))
+    return out
+
+
+def assert_no_cross_chain_collectives(
+    hlo_text: str, mesh: Mesh, *, allow_kinds: Tuple[str, ...] = ()
+) -> int:
+    """Fail if any collective's device group spans >1 (pod, data) coordinate.
+
+    Device ids on our mesh are row-major over (pod?, data, model), so the
+    chain coordinate of device i is ``i // model_size``. Returns the number
+    of collectives checked (all confined to the model axis)."""
+    model = mesh.shape["model"]
+    checked = 0
+    for kind, groups in collective_groups(hlo_text):
+        if kind in allow_kinds:
+            continue
+        for grp in groups:
+            chains = {dev // model for dev in grp}
+            if len(chains) > 1:
+                raise AssertionError(
+                    f"{kind} crosses chain groups {sorted(chains)[:4]}…: {grp[:8]}"
+                )
+        checked += 1
+    return checked

@@ -1,0 +1,250 @@
+"""Sharding policy: pytree path → PartitionSpec for every arch and step kind.
+
+Axes: ``data`` (+ ``pod`` multi-pod) = batch / FSDP / EP-MCMC chains;
+``model`` = tensor parallel (heads / d_ff / experts / vocab).
+
+Rules (see DESIGN.md §5):
+
+- embed (V, d)            → (model, fsdp?)         vocab-parallel
+- lm_head (d, V)          → (fsdp?, model)
+- attn w_q/w_k/w_v (d, o) → (fsdp?, model)         o = flat heads·head_dim
+- attn w_o (o, d)         → (model, fsdp?)
+- MLA down-projections    → (fsdp?, None);  up-projections → (None, model)
+- mlp w_gate/w_up (d, f)  → (fsdp?, model);  w_down (f, d) → (model, fsdp?)
+- MoE experts (E, d, f)   → (model, fsdp?, None)   expert-parallel on model
+- Mamba w_z/w_x (d, di)   → (fsdp?, model) iff per-shard heads stay whole,
+                             else (fsdp?, None);   w_B/w_C/w_dt replicated
+- norms / scalars         → replicated
+- optimizer state         → same spec as its parameter (ZeRO follows FSDP)
+
+``fsdp?`` = the 'data' axis when cfg.fsdp and the dim divides, else None.
+Multi-pod: FSDP stays *intra-pod* ('data' only — weight all-gathers never
+cross the pod axis; only gradient reductions do), batch shards over
+('pod','data').
+
+Divisibility is always checked; a rule that does not divide falls back to
+replication on that dim (never a compile error). Non-divisible *head* counts
+(qwen 20H, ds-coder 56H, llama 24H, whisper 8H vs model=16) still shard their
+flat projection dim when divisible — GSPMD then chooses collectives at the
+(B,S,H,hd) reshape; the roofline table quantifies that cost per arch
+(§Perf discusses the fix).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.lm.config import ModelConfig
+
+PyTree = Any
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+def _div(n: int, mesh: Mesh, axis: Optional[str | Tuple[str, ...]]) -> bool:
+    if axis is None:
+        return True
+    axes = (axis,) if isinstance(axis, str) else axis
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return n % size == 0
+
+
+def _spec(mesh: Mesh, shape, *axes) -> P:
+    """Build a PartitionSpec, dropping any axis that does not divide."""
+    cleaned = []
+    for dim, ax in zip(shape, axes):
+        cleaned.append(ax if ax is not None and _div(dim, mesh, ax) else None)
+    return P(*cleaned)
+
+
+def param_spec(
+    cfg: ModelConfig, mesh: Mesh, path: str, leaf: jax.ShapeDtypeStruct
+) -> P:
+    shape = leaf.shape
+    rank = len(shape)
+    fsdp = "data" if cfg.fsdp else None
+    m = "model"
+
+    def lead(n):  # None for leading stack dims (layer scan, vmapped periods)
+        return (None,) * n
+
+    # ---- embeddings / head -------------------------------------------------
+    if path.endswith("embed"):
+        return _spec(mesh, shape, m, fsdp)
+    if path.endswith("lm_head"):
+        return _spec(mesh, shape, fsdp, m)
+    if path.endswith("img_proj"):
+        return _spec(mesh, shape, None, m)
+
+    # ---- MoE ---------------------------------------------------------------
+    if "/moe/" in path or path.startswith("moe/"):
+        if "router" in path:
+            return P(*lead(rank))
+        if "experts" in path:
+            # (..., E, a, b): experts over model; FSDP over the larger matrix dim
+            if path.endswith("w_down"):
+                return _spec(mesh, shape, *lead(rank - 3), m, None, fsdp)
+            return _spec(mesh, shape, *lead(rank - 3), m, fsdp, None)
+        if "shared" in path:
+            if path.endswith("w_down"):
+                return _spec(mesh, shape, *lead(rank - 2), m, fsdp)
+            return _spec(mesh, shape, *lead(rank - 2), fsdp, m)
+        return P(*lead(rank))
+
+    # ---- Mamba -------------------------------------------------------------
+    if "/mamba/" in path or path.startswith("mamba/"):
+        di = cfg.ssm.expand * cfg.d_model
+        heads_ok = (
+            di % mesh.shape[m] == 0 and (di // mesh.shape[m]) % cfg.ssm.head_dim == 0
+        )
+        inner = m if heads_ok else None
+        if path.endswith(("w_z", "w_x")):
+            return _spec(mesh, shape, *lead(rank - 2), fsdp, inner)
+        if path.endswith("w_out"):
+            return _spec(mesh, shape, *lead(rank - 2), inner, fsdp)
+        if path.endswith(("conv_x", "conv_bias_x", "norm")):
+            return _spec(mesh, shape, *lead(rank - 1), inner)
+        if path.endswith(("w_B", "w_C", "w_dt")):
+            return _spec(mesh, shape, *lead(rank - 2), fsdp, None)
+        if path.endswith(("A_log", "dt_bias", "D")) and heads_ok:
+            return _spec(mesh, shape, *lead(rank - 1), m)
+        return P(*lead(rank))
+
+    # ---- attention (GQA / MLA / cross) --------------------------------------
+    if any(s in path for s in ("/attn/", "/cross/")):
+        if path.endswith(("w_q/w", "w_k/w", "w_v/w")):
+            return _spec(mesh, shape, *lead(rank - 2), fsdp, m)
+        if path.endswith(("w_q/b", "w_k/b", "w_v/b")):
+            return _spec(mesh, shape, *lead(rank - 1), m)
+        if path.endswith("w_o/w"):
+            return _spec(mesh, shape, *lead(rank - 2), m, fsdp)
+        # MLA
+        if path.endswith(("w_dq", "w_dkv")):
+            return _spec(mesh, shape, *lead(rank - 2), fsdp, None)
+        if path.endswith(("w_uq", "w_uk", "w_uv")):
+            return _spec(mesh, shape, *lead(rank - 2), None, m)
+        if path.endswith("w_o"):
+            return _spec(mesh, shape, *lead(rank - 2), m, fsdp)
+        return P(*lead(rank))
+
+    # ---- dense MLP ----------------------------------------------------------
+    if "/mlp/" in path or path.startswith("mlp/"):
+        if path.endswith("w_down"):
+            return _spec(mesh, shape, *lead(rank - 2), m, fsdp)
+        return _spec(mesh, shape, *lead(rank - 2), fsdp, m)
+
+    # norms, scalars, everything else: replicated
+    return P(*lead(rank))
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params: PyTree) -> PyTree:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [param_spec(cfg, mesh, _path_str(path), leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_specs(cfg: ModelConfig, mesh: Mesh, opt_state: PyTree, pspecs: PyTree) -> PyTree:
+    """AdamW state: mu/nu mirror their parameter's spec; count replicated."""
+    return type(opt_state)(mu=pspecs, nu=pspecs, count=P())
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / activation specs
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch: PyTree) -> PyTree:
+    dp = batch_axes(mesh)
+
+    def spec(path, leaf):
+        b = leaf.shape[0]
+        lead = dp if _div(b, mesh, dp) else None
+        return P(lead, *([None] * (len(leaf.shape) - 1)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(_path_str(p), l) for p, l in flat]
+    )
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, caches: PyTree) -> PyTree:
+    """Decode cache sharding.
+
+    GQA KV cache (…, B, S, K, hd): batch over data axes when divisible;
+    K over model when divisible, else S over model (sequence-sharded cache —
+    GSPMD lowers decode softmax into partial reductions = flash-decoding).
+    For batch=1 (long_500k) the sequence shards over *all* axes.
+    MLA cache (…, B, S, lora): S over model (latent is head-shared).
+    Mamba h (…, B, H, hd, N): H over model when divisible.
+    """
+    dp = batch_axes(mesh)
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        rank = len(shape)
+        # find (B, S, ...) position: caches from stacked groups have lead dims
+        if path.endswith(("/k", "/v")) and rank >= 4:
+            nl = rank - 4
+            b, s, k, hd = shape[nl:]
+            b_ax = dp if _div(b, mesh, dp) else None
+            if _div(k, mesh, "model"):
+                return P(*([None] * nl), b_ax, None, "model", None)
+            seq_ax = ("data", "model") if b_ax is None and _div(s, mesh, ("data", "model")) else "model"
+            if not _div(s, mesh, seq_ax):
+                seq_ax = None
+            return P(*([None] * nl), b_ax, seq_ax, None, None)
+        if path.endswith(("c_kv", "k_rope")) and rank >= 3:
+            nl = rank - 3
+            b, s, r = shape[nl:]
+            b_ax = dp if _div(b, mesh, dp) else None
+            seq_ax = ("data", "model") if b_ax is None and _div(s, mesh, ("data", "model")) else "model"
+            if not _div(s, mesh, seq_ax):
+                seq_ax = None
+            return P(*([None] * nl), b_ax, seq_ax, None)
+        if path.endswith("/h") and rank >= 4:
+            nl = rank - 4
+            b, h, hd, n = shape[nl:]
+            b_ax = dp if _div(b, mesh, dp) else None
+            h_ax = "model" if (h % mesh.shape["model"] == 0) else None
+            return P(*([None] * nl), b_ax, h_ax, None, None)
+        if "/conv/" in path and rank >= 3:
+            nl = rank - 3
+            b = shape[nl]
+            b_ax = dp if _div(b, mesh, dp) else None
+            return P(*([None] * nl), b_ax, None, None)
+        # fallback: shard dim0-batch if it divides
+        b_ax = dp if shape and _div(shape[0], mesh, dp) else None
+        return P(b_ax, *([None] * (rank - 1))) if rank else P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(_path_str(p), l) for p, l in flat]
+    )
+
+
+def to_shardings(mesh: Mesh, specs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

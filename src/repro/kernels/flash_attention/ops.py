@@ -1,0 +1,60 @@
+"""jit'd wrapper: GQA layout handling, padding, VMEM-aware block sizing."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _round_up(n: int, k: int) -> int:
+    return (n + k - 1) // k * k
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret", "min_kernel_s")
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, K, G, hd)
+    k: jnp.ndarray,  # (B, T, K, hd)
+    v: jnp.ndarray,  # (B, T, K, hd_v)
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = True,  # CPU rig default; False on real TPU
+    min_kernel_s: int = 64,
+) -> jnp.ndarray:
+    """Pallas flash-attention forward; returns (B, S, K, G, hd_v)."""
+    b, s, kh, g, hd = q.shape
+    t = k.shape[1]
+    hd_v = v.shape[-1]
+    if s < min_kernel_s or t < min_kernel_s:
+        return flash_attention_ref(q, k, v, causal=causal)
+
+    # shrink blocks until the f32 score tile (block_q·G × block_k) + q tile
+    # fit a ~12 MB VMEM budget
+    while block_q * g * (block_k + hd + hd_v) * 4 > 12 * 2**20 and block_q > 128:
+        block_q //= 2
+    while block_q * g * (block_k + hd + hd_v) * 4 > 12 * 2**20 and block_k > 128:
+        block_k //= 2
+
+    sp, tp = _round_up(s, block_q), _round_up(t, block_k)
+    qf = q.transpose(0, 2, 1, 3, 4).reshape(b * kh, s, g * hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kh, t, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kh, t, hd_v)
+    qf = jnp.pad(qf, ((0, 0), (0, sp - s), (0, 0)))
+    kf = jnp.pad(kf, ((0, 0), (0, tp - t), (0, 0)))
+    vf = jnp.pad(vf, ((0, 0), (0, tp - t), (0, 0)))
+
+    out = flash_attention_fwd_kernel(
+        qf, kf, vf,
+        g=g, hd=hd, hd_v=hd_v, kv_len=t, causal=causal,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )  # (B*K, Sp, G*hd_v)
+    out = out[:, :s].reshape(b, kh, s, g, hd_v).transpose(0, 2, 1, 3, 4)
+    return out

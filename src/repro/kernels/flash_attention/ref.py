@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the Pallas flash-attention kernel.
+
+GQA layout: q (B, S, K, G, hd); k (B, T, K, hd); v (B, T, K, hd_v) —
+hd_v may differ from hd (MLA concatenates nope⊕rope on the qk side only).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+) -> jnp.ndarray:
+    b, s, kh, g, hd = q.shape
+    t = k.shape[1]
+    scale = hd ** -0.5
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        mask = jnp.arange(s)[:, None] >= jnp.arange(t)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

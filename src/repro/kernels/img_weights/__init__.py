@@ -1,0 +1,4 @@
+from repro.kernels.img_weights.ops import img_log_weights
+from repro.kernels.img_weights.ref import img_log_weights_ref
+
+__all__ = ["img_log_weights", "img_log_weights_ref"]

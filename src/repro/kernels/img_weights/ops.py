@@ -1,0 +1,52 @@
+"""jit'd public wrapper for the IMG log-weight kernel: padding + dispatch.
+
+Pads P to the block multiple (extra rows sliced off) and d with zeros (zero
+features are exactly weight-neutral: they shift SSE by 0). Falls back to the
+reference for tiny problems where kernel launch overhead dominates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.img_weights.kernel import img_log_weights_kernel
+from repro.kernels.img_weights.ref import img_log_weights_ref
+
+
+def _round_up(n: int, k: int) -> int:
+    return (n + k - 1) // k * k
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_p", "block_d", "interpret", "min_kernel_p")
+)
+def img_log_weights(
+    theta: jnp.ndarray,  # (P, M, d)
+    h: jnp.ndarray | float,
+    *,
+    block_p: int = 256,
+    block_d: int = 512,
+    interpret: bool = True,  # CPU rig: interpret; flip to False on real TPU
+    min_kernel_p: int = 64,
+) -> jnp.ndarray:
+    P, M, d = theta.shape
+    if P < min_kernel_p:
+        return img_log_weights_ref(theta, h)
+    block_p = min(block_p, _round_up(P, 8))
+    block_d = min(block_d, _round_up(d, 128))
+    Pp, dp = _round_up(P, block_p), _round_up(d, block_d)
+    padded = jnp.zeros((Pp, M, dp), theta.dtype).at[:P, :, :d].set(theta)
+    h_arr = jnp.asarray(h, jnp.float32).reshape(1)
+    out = img_log_weights_kernel(
+        padded, h_arr, block_p=block_p, block_d=block_d, interpret=interpret
+    )
+    # padded d-features contribute 0 SSE but DO enter the log-normalizer the
+    # kernel applies with the *padded* d; correct by the normalizer delta.
+    if dp != d:
+        h32 = jnp.asarray(h, jnp.float32)
+        delta = M * ((dp - d) / 2.0) * jnp.log(2.0 * jnp.pi * h32 * h32)
+        out = out + delta
+    return out[:P]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the IMG mixture log-weight kernel (paper Eq. 3.5).
+
+Given P candidate components, each a selection of one sample per machine
+``theta`` (P, M, d), the unnormalized log mixture weight is
+
+    log w_t = Σ_m log N(θ^m_{t_m} | θ̄_t, h² I_d)
+            = −SSE_t / (2h²) − M·(d/2)·log(2π h²),
+    SSE_t  = Σ_m ‖θ^m_{t_m} − θ̄_t‖².
+
+This is the inner loop of Algorithm 1 when proposals are evaluated in batch
+(P parallel IMG chains / vectorized sweeps / tree combine scoring).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def img_log_weights_ref(theta: jnp.ndarray, h: jnp.ndarray | float) -> jnp.ndarray:
+    """theta (P, M, d), h scalar → (P,) float32 log weights."""
+    theta = theta.astype(jnp.float32)
+    h = jnp.asarray(h, jnp.float32)
+    mean = jnp.mean(theta, axis=1, keepdims=True)  # (P, 1, d)
+    sse = jnp.sum((theta - mean) ** 2, axis=(1, 2))  # (P,)
+    m, d = theta.shape[1], theta.shape[2]
+    return -0.5 * sse / (h * h) - m * (d / 2.0) * jnp.log(2.0 * jnp.pi * h * h)

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: streaming Gaussian-KDE log-density.
+
+Flash-attention-style online logsumexp, rethought for KDE scoring:
+
+- grid = (nq // block_q, ns // block_s): parallel over query tiles,
+  sequential over center tiles.
+- Per step: squared distances via the MXU identity
+      ‖q − s‖² = ‖q‖² + ‖s‖² − 2·q·sᵀ
+  (one (block_q, d)·(d, block_s) matmul — the same trick flash attention
+  uses to keep the QKᵀ score tile MXU-bound), then an online max/renormalize
+  update of the running (m, ℓ) pair in VMEM scratch. The (nq, ns) score
+  matrix never exists in HBM.
+- Center-tile padding is handled with an additive mask row (−1e30 before
+  max), provided by ops.py.
+
+VMEM per step: (block_q + block_s)·d·4 + 2·block_q·block_s·4 + O(block_q).
+Defaults (256, 512, d ≤ 1024) stay well under 16 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_BIG = -1e30
+
+
+def _kde_kernel(q_ref, s_ref, mask_ref, h_ref, out_ref, m_ref, l_ref, *, n_sblocks: int, d: int, ns: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_BIG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)  # (block_q, d)
+    s = s_ref[...].astype(jnp.float32)  # (block_s, d)
+    mask = mask_ref[...].astype(jnp.float32)  # (1, block_s) 0 / -1e30
+    h = h_ref[0]
+
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)  # (block_q, 1)
+    sn = jnp.sum(s * s, axis=-1)[None, :]  # (1, block_s)
+    cross = jax.lax.dot_general(
+        q, s, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (block_q, block_s)
+    scores = -(qn + sn - 2.0 * cross) * (0.5 / (h * h)) + mask
+
+    m_new = jnp.maximum(m_ref[...], jnp.max(scores, axis=-1))
+    correction = jnp.exp(m_ref[...] - m_new)
+    l_ref[...] = l_ref[...] * correction + jnp.sum(
+        jnp.exp(scores - m_new[:, None]), axis=-1
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == n_sblocks - 1)
+    def _finalize():
+        log_norm = jnp.log(jnp.asarray(ns, jnp.float32)) + 0.5 * d * jnp.log(
+            2.0 * jnp.pi * h * h
+        )
+        out_ref[...] = m_ref[...] + jnp.log(l_ref[...]) - log_norm
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_s", "interpret", "ns_actual"))
+def kde_log_density_kernel(
+    queries: jnp.ndarray,  # (nq, d) padded: nq % block_q == 0
+    centers: jnp.ndarray,  # (ns, d) padded: ns % block_s == 0
+    mask: jnp.ndarray,  # (1, ns) additive: 0 valid / -1e30 padded
+    h: jnp.ndarray,  # (1,)
+    *,
+    ns_actual: int,
+    block_q: int = 256,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    nq, d = queries.shape
+    ns = centers.shape[0]
+    n_q, n_s = nq // block_q, ns // block_s
+    kernel = functools.partial(_kde_kernel, n_sblocks=n_s, d=d, ns=ns_actual)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_q, n_s),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_s, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, block_s), lambda i, j: (0, j)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_q,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nq,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(queries, centers, mask, h)

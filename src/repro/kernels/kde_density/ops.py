@@ -1,0 +1,46 @@
+"""jit'd wrapper for the streaming KDE log-density kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kde_density.kernel import kde_log_density_kernel
+from repro.kernels.kde_density.ref import kde_log_density_ref
+
+
+def _round_up(n: int, k: int) -> int:
+    return (n + k - 1) // k * k
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_s", "interpret", "min_kernel_n")
+)
+def kde_log_density(
+    queries: jnp.ndarray,  # (nq, d)
+    centers: jnp.ndarray,  # (ns, d)
+    h: jnp.ndarray | float,
+    *,
+    block_q: int = 256,
+    block_s: int = 512,
+    interpret: bool = True,  # CPU rig default; False on real TPU
+    min_kernel_n: int = 64,
+) -> jnp.ndarray:
+    nq, d = queries.shape
+    ns = centers.shape[0]
+    if nq < min_kernel_n or ns < min_kernel_n:
+        return kde_log_density_ref(queries, centers, h)
+    block_q = min(block_q, _round_up(nq, 8))
+    block_s = min(block_s, _round_up(ns, 128))
+    nq_p, ns_p = _round_up(nq, block_q), _round_up(ns, block_s)
+    qp = jnp.zeros((nq_p, d), queries.dtype).at[:nq].set(queries)
+    sp = jnp.zeros((ns_p, d), centers.dtype).at[:ns].set(centers)
+    mask = jnp.full((1, ns_p), -1e30, jnp.float32).at[:, :ns].set(0.0)
+    h_arr = jnp.asarray(h, jnp.float32).reshape(1)
+    out = kde_log_density_kernel(
+        qp, sp, mask, h_arr,
+        ns_actual=ns, block_q=block_q, block_s=block_s, interpret=interpret,
+    )
+    return out[:nq]

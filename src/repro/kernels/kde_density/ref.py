@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: Gaussian-KDE log-density of queries under a sample set.
+
+Used by the L2-distance metric (paper §8: d₂(p, p̂) between groundtruth and
+combined samples) and by the semiparametric correction. For queries Q (nq, d)
+and kernel centers S (ns, d) with bandwidth h:
+
+    log p̂(q) = logsumexp_j [ −‖q − s_j‖² / (2h²) ] − log(ns) − (d/2)·log(2πh²)
+
+The naive form materializes the (nq, ns) score matrix; the kernel streams it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kde_log_density_ref(
+    queries: jnp.ndarray,  # (nq, d)
+    centers: jnp.ndarray,  # (ns, d)
+    h: jnp.ndarray | float,
+) -> jnp.ndarray:
+    q = queries.astype(jnp.float32)
+    s = centers.astype(jnp.float32)
+    h = jnp.asarray(h, jnp.float32)
+    d = q.shape[-1]
+    sq = jnp.sum((q[:, None, :] - s[None, :, :]) ** 2, axis=-1)  # (nq, ns)
+    lse = jax.scipy.special.logsumexp(-0.5 * sq / (h * h), axis=1)
+    return lse - jnp.log(s.shape[0]) - 0.5 * d * jnp.log(2.0 * jnp.pi * h * h)

@@ -1,0 +1,2 @@
+"""Launch layer: mesh construction, multi-pod dry-run, training/serving/MCMC
+entry points. Nothing here touches jax device state at import time."""

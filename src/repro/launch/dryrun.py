@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without hardware:
+``jit(step, in_shardings=...).lower(**input_specs).compile()`` must succeed on
+the single-pod (16×16) and multi-pod (2×16×16) production meshes for all 40
+assigned cells (minus the DESIGN.md §4 long_500k skips, which are recorded,
+not dropped). Per cell we persist:
+
+- ``memory_analysis()``  per-device bytes (argument/output/temp/peak)
+- ``cost_analysis()``    XLA's flops/bytes (NOTE: visits while bodies once)
+- loop-aware HLO stats   flops / HBM-proxy bytes / collective bytes × trips
+  (:mod:`repro.launch.hlo_stats` — the numbers §Roofline uses)
+- the three roofline terms vs v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link
+
+Usage:
+  python -m repro.launch.dryrun                        # everything, resumable
+  python -m repro.launch.dryrun --arch mamba2_130m --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --list                 # show cells + skips
+
+Results accumulate in ``results/dryrun/<mesh>/<arch>--<shape>.json`` so an
+interrupted sweep resumes where it stopped (--force recomputes).
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ALIASES, ARCH_IDS, SHAPES, all_cells, get_config
+from repro.launch import hlo_stats
+from repro.launch.input_specs import build_cell
+from repro.launch.mesh import make_production_mesh
+
+# v5e hardware constants (assignment brief)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / link (ICI)
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) per step; decode D=B·1."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens  # forward only
+    return 2.0 * n * shape.global_batch  # one token / sequence, forward only
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, force: bool = False) -> dict:
+    out_dir = RESULTS_DIR / mesh_kind
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{arch}--{shape_name}.json"
+    if out_path.exists() and not force:
+        rec = json.loads(out_path.read_text())
+        if rec.get("status") in ("ok", "skip"):
+            print(f"[cached] {mesh_kind} {arch} {shape_name}: {rec['status']}")
+            return rec
+
+    cfg = get_config(arch)
+    for cell in all_cells():
+        if cell.arch == arch and cell.shape.name == shape_name and cell.skip:
+            rec = {
+                "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skip", "reason": cell.skip,
+            }
+            out_path.write_text(json.dumps(rec, indent=2))
+            print(f"[skip]   {mesh_kind} {arch} {shape_name}: {cell.skip}")
+            return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "chips": chips}
+    try:
+        plan = build_cell(arch, shape_name, mesh)
+        from repro.distributed.sharding import to_shardings
+
+        in_shardings = tuple(to_shardings(mesh, s) for s in plan.in_shardings)
+        with mesh:
+            jitted = jax.jit(
+                plan.fn,
+                in_shardings=in_shardings,
+                donate_argnums=plan.donate,
+            )
+            lowered = jitted.lower(*plan.args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        print(mem)  # proves it fits
+        print({k: cost[k] for k in ("flops", "bytes accessed") if k in cost})
+
+        hlo_text = compiled.as_text()
+        hlo_dir = RESULTS_DIR.parent / "hlo" / mesh_kind
+        hlo_dir.mkdir(parents=True, exist_ok=True)
+        import gzip
+
+        with gzip.open(hlo_dir / f"{arch}--{shape_name}.hlo.gz", "wt") as f:
+            f.write(hlo_text)  # offline roofline recomputation without recompiling
+
+        stats = hlo_stats.analyze(hlo_text)
+        # hlo_stats quantities are per-device (post-SPMD partitioned program)
+        compute_s = stats.flops / PEAK_FLOPS
+        memory_s = stats.bytes_accessed / HBM_BW
+        collective_s = stats.collective_bytes / LINK_BW
+        terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+        dominant = max(terms, key=terms.get)
+
+        mf = model_flops(cfg, plan.shape)
+        hlo_flops_global = stats.flops * chips
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower - t0, 1),
+            compile_s=round(t_compile - t_lower, 1),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+            cost_analysis={
+                "flops": cost.get("flops"),
+                "bytes_accessed": cost.get("bytes accessed"),
+            },
+            hlo={
+                "flops_per_device": stats.flops,
+                "bytes_per_device": stats.bytes_accessed,
+                "bytes_all_ops_per_device": stats.bytes_all_ops,
+                "collective_bytes_per_device": stats.collective_bytes,
+                "collective_bytes_by_kind": stats.collective_bytes_by_kind,
+                "collective_count": stats.collective_count,
+            },
+            roofline={
+                **{k: float(v) for k, v in terms.items()},
+                "dominant": dominant,
+                "bound_s": float(max(terms.values())),
+            },
+            model_flops=mf,
+            useful_flops_ratio=(mf / hlo_flops_global) if hlo_flops_global else None,
+        )
+        print(
+            f"[ok]     {mesh_kind} {arch} {shape_name}: "
+            f"compute={compute_s*1e3:.2f}ms memory={memory_s*1e3:.2f}ms "
+            f"collective={collective_s*1e3:.2f}ms dominant={dominant} "
+            f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)"
+        )
+    except Exception as e:  # a failure here is a bug in our sharding config
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[ERROR]  {mesh_kind} {arch} {shape_name}: {e}", file=sys.stderr)
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape name (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for cell in all_cells():
+            status = f"SKIP: {cell.skip}" if cell.skip else "run"
+            print(f"{cell.arch:24s} {cell.shape.name:12s} {status}")
+        return
+
+    archs = [ALIASES.get(args.arch, args.arch)] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else [s.name for s in SHAPES]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    n_err = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mesh_kind, force=args.force)
+                n_err += rec.get("status") == "error"
+    if n_err:
+        sys.exit(f"{n_err} cells FAILED")
+    print("all requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+``build_cell(arch, shape_name, mesh)`` returns everything the dry-run (and the
+real launcher) needs to ``jit(...).lower(...)`` one cell:
+
+- ``fn``          the pure step function (cfg closed over)
+- ``args``        pytree of jax.ShapeDtypeStruct — *no device allocation*
+- ``in_shardings``/``out_shardings`` NamedSharding pytrees
+- ``donate``      argnums whose buffers alias outputs (params/opt in train,
+                  decode state in serve — matches production memory behaviour)
+
+Shape semantics (assignment brief):
+- ``train_4k``/``prefill_32k`` lower the batch through train_step /
+  serve_prefill at (global_batch, seq_len).
+- ``decode_32k``/``long_500k`` lower ``serve_decode_step``: ONE new token
+  against a KV cache of seq_len — not a full forward.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import SHAPES, ShapeSpec, get_config
+from repro.data.tokens import make_batch_specs
+from repro.distributed import sharding as shd
+from repro.models.lm import model as mdl
+from repro.models.lm import steps
+from repro.models.lm.config import ModelConfig
+
+PyTree = Any
+
+_KEY_SPEC = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+class CellPlan(NamedTuple):
+    arch: str
+    shape: ShapeSpec
+    cfg: ModelConfig
+    fn: Any
+    args: Tuple[PyTree, ...]
+    in_shardings: Tuple[PyTree, ...]
+    donate: Tuple[int, ...]
+
+
+def shape_by_name(name: str) -> ShapeSpec:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}; known: {[s.name for s in SHAPES]}")
+
+
+def _specs_of(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def train_state_specs(cfg: ModelConfig) -> Tuple[PyTree, PyTree]:
+    """(params, opt_state) as ShapeDtypeStructs — via eval_shape, no alloc."""
+    return jax.eval_shape(lambda k: steps.init_train_state(k, cfg), _KEY_SPEC)
+
+
+def param_specs_only(cfg: ModelConfig) -> PyTree:
+    return jax.eval_shape(lambda k: mdl.init_params(k, cfg), _KEY_SPEC)
+
+
+def _batch_structs(cfg: ModelConfig, batch: int, seq: int, *, labels: bool) -> PyTree:
+    specs = make_batch_specs(cfg, batch, seq)
+    if not labels:
+        specs.pop("labels", None)
+    return specs
+
+
+def _decode_state_specs(cfg: ModelConfig, batch: int, seq_len: int) -> steps.DecodeState:
+    cache_dtype = jnp.dtype(cfg.dtype)
+    caches = jax.eval_shape(lambda: mdl.init_caches(cfg, batch, seq_len, cache_dtype))
+    memory = None
+    if cfg.num_encoder_layers:
+        memory = jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), cache_dtype)
+    return steps.DecodeState(
+        caches=caches,
+        position=jax.ShapeDtypeStruct((), jnp.int32),
+        last_token=jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+        memory=memory,
+    )
+
+
+def _decode_state_shardings(cfg: ModelConfig, mesh: Mesh, state: steps.DecodeState):
+    dp = shd.batch_axes(mesh)
+    b = state.last_token.shape[0]
+    b_ax = dp if b % _axes_size(mesh, dp) == 0 else None
+    mem_spec = None
+    if state.memory is not None:
+        mem_spec = P(b_ax, None, None)
+    return steps.DecodeState(
+        caches=shd.cache_specs(cfg, mesh, state.caches),
+        position=P(),
+        last_token=P(b_ax, None),
+        memory=mem_spec,
+    )
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh) -> CellPlan:
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        params, opt = train_state_specs(cfg)
+        batch = _batch_structs(cfg, B, S, labels=True)
+        fn = functools.partial(_train_fn, cfg=cfg)
+        p_spec = shd.param_specs(cfg, mesh, params)
+        o_spec = shd.opt_specs(cfg, mesh, opt, p_spec)
+        b_spec = shd.batch_specs(cfg, mesh, batch)
+        return CellPlan(
+            arch=arch,
+            shape=shape,
+            cfg=cfg,
+            fn=fn,
+            args=(params, opt, batch),
+            in_shardings=(p_spec, o_spec, b_spec),
+            donate=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        params = param_specs_only(cfg)
+        batch = _batch_structs(cfg, B, S, labels=False)
+        # VLM: the image-patch prefix is prepended to the prompt, so the
+        # emitted caches must hold S + num_image_tokens entries.
+        fn = functools.partial(_prefill_fn, cfg=cfg, max_len=S + cfg.num_image_tokens)
+        p_spec = shd.param_specs(cfg, mesh, params)
+        b_spec = shd.batch_specs(cfg, mesh, batch)
+        return CellPlan(
+            arch=arch,
+            shape=shape,
+            cfg=cfg,
+            fn=fn,
+            args=(params, batch),
+            in_shardings=(p_spec, b_spec),
+            donate=(),
+        )
+
+    # decode: one token against a seq_len cache
+    params = param_specs_only(cfg)
+    state = _decode_state_specs(cfg, B, S)
+    fn = functools.partial(_decode_fn, cfg=cfg)
+    p_spec = shd.param_specs(cfg, mesh, params)
+    s_spec = _decode_state_shardings(cfg, mesh, state)
+    return CellPlan(
+        arch=arch,
+        shape=shape,
+        cfg=cfg,
+        fn=fn,
+        args=(params, state),
+        in_shardings=(p_spec, s_spec),
+        donate=(1,),
+    )
+
+
+# module-level step wrappers (picklable, stable identity for jit caching)
+
+
+def _train_fn(params, opt_state, batch, *, cfg):
+    return steps.train_step(params, opt_state, batch, cfg)
+
+
+def _prefill_fn(params, batch, *, cfg, max_len):
+    return steps.serve_prefill(params, cfg, batch, max_len)
+
+
+def _decode_fn(params, state, *, cfg):
+    return steps.serve_decode_step(params, cfg, state)
+
+
+def input_specs(arch: str, shape_name: str) -> PyTree:
+    """The brief's entry point: ShapeDtypeStruct stand-ins for every model
+    input of this cell (weak-type-correct, shardable, no allocation)."""
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    if shape.kind == "train":
+        return _batch_structs(cfg, shape.global_batch, shape.seq_len, labels=True)
+    if shape.kind == "prefill":
+        return _batch_structs(cfg, shape.global_batch, shape.seq_len, labels=False)
+    return _decode_state_specs(cfg, shape.global_batch, shape.seq_len)

@@ -1,0 +1,68 @@
+"""Recompute roofline terms offline from the dry-run's saved HLO text.
+
+The dry-run persists ``results/hlo/<mesh>/<arch>--<shape>.hlo.gz`` exactly so
+the traffic model in :mod:`repro.launch.hlo_stats` can be iterated without
+recompiling 64 cells. This script re-analyzes every saved HLO and patches the
+``hlo``/``roofline`` blocks of the corresponding JSON record in place.
+
+  PYTHONPATH=src python -m repro.launch.reroofline
+"""
+
+from __future__ import annotations
+
+import gzip
+import json
+import pathlib
+
+from repro.launch import hlo_stats
+from repro.launch.dryrun import HBM_BW, LINK_BW, PEAK_FLOPS, RESULTS_DIR
+
+
+def main() -> None:
+    hlo_root = RESULTS_DIR.parent / "hlo"
+    n = 0
+    for gz in sorted(hlo_root.glob("*/*.hlo.gz")):
+        mesh_kind = gz.parent.name
+        cell = gz.name.replace(".hlo.gz", "")
+        json_path = RESULTS_DIR / mesh_kind / f"{cell}.json"
+        if not json_path.exists():
+            continue
+        rec = json.loads(json_path.read_text())
+        if rec.get("status") != "ok":
+            continue
+        with gzip.open(gz, "rt") as f:
+            stats = hlo_stats.analyze(f.read())
+        chips = rec["chips"]
+        terms = {
+            "compute_s": stats.flops / PEAK_FLOPS,
+            "memory_s": stats.bytes_accessed / HBM_BW,
+            "collective_s": stats.collective_bytes / LINK_BW,
+        }
+        dominant = max(terms, key=terms.get)
+        rec["hlo"] = {
+            "flops_per_device": stats.flops,
+            "bytes_per_device": stats.bytes_accessed,
+            "bytes_all_ops_per_device": stats.bytes_all_ops,
+            "collective_bytes_per_device": stats.collective_bytes,
+            "collective_bytes_by_kind": stats.collective_bytes_by_kind,
+            "collective_count": stats.collective_count,
+        }
+        rec["roofline"] = {
+            **{k: float(v) for k, v in terms.items()},
+            "dominant": dominant,
+            "bound_s": float(max(terms.values())),
+        }
+        mf = rec.get("model_flops")
+        if mf:
+            g = stats.flops * chips
+            rec["useful_flops_ratio"] = (mf / g) if g else None
+        json_path.write_text(json.dumps(rec, indent=2))
+        n += 1
+        print(f"re-analyzed {mesh_kind}/{cell}: dominant={dominant} "
+              f"mem={terms['memory_s']*1e3:.1f}ms comp={terms['compute_s']*1e3:.1f}ms "
+              f"coll={terms['collective_s']*1e3:.1f}ms")
+    print(f"{n} cells updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Training driver — synchronous AdamW *or* EP-MCMC (the paper) on one mesh.
+
+Modes
+-----
+``--mode sgd``     classic data-parallel training: one θ, gradients averaged
+                   over the data axes every step (the baseline whose
+                   collective bytes the paper's mode deletes).
+``--mode epmcmc``  the paper: M = |data axes| independent subposterior pSGLD
+                   chains, zero cross-chain collectives during sampling,
+                   parametric (BvM) combination at the end.
+
+Fault tolerance: checkpoints every ``--ckpt-every`` steps via the async
+:class:`repro.checkpoint.Checkpointer`; ``--resume`` restarts from the newest
+manifest (elastic: ``--chains`` may differ from the checkpoint's). Data is a
+pure function of (seed, shard, step): a restarted run replays the exact
+stream; a re-sharded run reads disjoint shards by construction.
+
+CPU smoke example (also examples/lm_bayes_sgld.py):
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2_130m --reduced \
+      --mode epmcmc --steps 30 --batch 4 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer, latest_step, restore
+from repro.configs import ALIASES, get_config
+from repro.data.tokens import TokenStream
+from repro.distributed import epmcmc
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.lm import steps as lm_steps
+from repro.models.lm.config import reduced
+
+
+def build_argparser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--mode", default="epmcmc", choices=["sgd", "epmcmc", "adamw"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8, help="per-chain batch size")
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--chains", type=int, default=0, help="0 = one per data-axis index")
+    ap.add_argument("--step-size", type=float, default=1e-5)
+    ap.add_argument("--burn-in", type=int, default=0)
+    ap.add_argument("--shard-tokens", type=float, default=0.0,
+                    help="tokens per data shard N_m (0 = batch*seq*100)")
+    ap.add_argument("--reduced", action="store_true", help="CPU smoke config")
+    ap.add_argument("--mesh", default="host", choices=["host", "pod", "multipod"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    return ap
+
+
+def main(argv=None) -> dict:
+    args = build_argparser().parse_args(argv)
+    cfg = get_config(ALIASES.get(args.arch, args.arch))
+    if args.reduced:
+        cfg = reduced(cfg)
+
+    mesh = (
+        make_host_mesh()
+        if args.mesh == "host"
+        else make_production_mesh(multi_pod=(args.mesh == "multipod"))
+    )
+    n_chains = args.chains or max(epmcmc.num_chains(mesh), 1)
+    key = jax.random.PRNGKey(args.seed)
+    shard_tokens = args.shard_tokens or float(args.batch * args.seq * 100)
+
+    streams = [
+        TokenStream(cfg.vocab_size, args.batch, args.seq, seed=args.seed,
+                    shard_index=c, num_shards=n_chains)
+        for c in range(n_chains)
+    ]
+
+    def stacked_batch(step: int):
+        batches = [s.batch(step) for s in streams]
+        return {
+            k: jnp.stack([b[k] for b in batches]) for k in batches[0]
+        }
+
+    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    start_step = 0
+
+    if args.mode in ("epmcmc", "sgd"):
+        state = epmcmc.init_state(key, cfg, n_chains)
+        if ckpt and args.resume and latest_step(args.ckpt_dir) is not None:
+            state, meta = restore(args.ckpt_dir, template=state)
+            start_step = int(meta.get("train_step", 0))
+            print(f"resumed from step {start_step}")
+        step_fn = (
+            epmcmc.epmcmc_step if args.mode == "epmcmc" else epmcmc.sgd_baseline_step
+        )
+        kwargs = dict(
+            num_shards=n_chains,
+            shard_tokens=shard_tokens,
+            step_size=args.step_size,
+        )
+        if args.mode == "epmcmc":
+            kwargs["burn_in"] = args.burn_in
+        jitted = jax.jit(functools.partial(step_fn, cfg=cfg, **kwargs), donate_argnums=(0,))
+        metrics = {}
+        t0 = time.time()
+        for step in range(start_step, args.steps):
+            state, metrics = jitted(state, stacked_batch(step))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(
+                    f"step {step:5d} loss={float(jnp.mean(metrics['loss_per_chain'])):.4f} "
+                    f"({(time.time()-t0)/max(step-start_step+1,1):.2f}s/step)"
+                )
+            if ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.save(
+                    step + 1, state,
+                    metadata={"train_step": step + 1, "num_chains": n_chains,
+                              "arch": cfg.name, "mode": args.mode},
+                )
+        if args.mode == "epmcmc":
+            moments = jax.jit(epmcmc.combine_parametric_diag)(state)
+            gm = jax.tree.leaves(moments.mean)
+            print(
+                "combined posterior (parametric/BvM): "
+                f"{sum(g.size for g in gm)} parameter dims, "
+                f"mean|μ|={float(jnp.mean(jnp.abs(gm[0]))):.4f}"
+            )
+        if ckpt:
+            ckpt.close()
+        return {"loss": float(jnp.mean(metrics["loss_per_chain"])) if "loss_per_chain" in metrics else float("nan")}
+
+    # plain AdamW path (per-chip data parallel through jit; used by examples)
+    params, opt = lm_steps.init_train_state(key, cfg)
+    if ckpt and args.resume and latest_step(args.ckpt_dir) is not None:
+        (params, opt), meta = restore(args.ckpt_dir, template=(params, opt))
+        start_step = int(meta.get("train_step", 0))
+    train = jax.jit(
+        functools.partial(lm_steps.train_step, cfg=cfg), donate_argnums=(0, 1)
+    )
+    stream = TokenStream(cfg.vocab_size, args.batch, args.seq, seed=args.seed)
+    metrics = {}
+    for step in range(start_step, args.steps):
+        params, opt, metrics = train(params, opt, stream.batch(step))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss={float(metrics['loss']):.4f}")
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, (params, opt), metadata={"train_step": step + 1})
+    if ckpt:
+        ckpt.close()
+    return {"loss": float(metrics.get("loss", jnp.nan))}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Models: paper §8 Bayesian experiment models + assigned LM architecture zoo."""

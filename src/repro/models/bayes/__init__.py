@@ -1,0 +1,16 @@
+"""Paper §8 experiment models.
+
+Every model exposes the same surface so the EP-MCMC driver is model-agnostic:
+
+- ``generate_data(key, ...) -> (data, true_params)``
+- ``log_prior(theta) -> ()``           (θ is a flat, unconstrained array)
+- ``log_lik(theta, data) -> ()``       (summed over the data's leading axis)
+
+plus model-specific extras (closed-form posteriors, Gibbs blocks, predictive
+accuracy, label-permutation proposals).
+"""
+
+from repro.models.bayes import gmm as gmm  # noqa: F401
+from repro.models.bayes import linear_gaussian as linear_gaussian  # noqa: F401
+from repro.models.bayes import logistic_regression as logistic_regression  # noqa: F401
+from repro.models.bayes import poisson_gamma as poisson_gamma  # noqa: F401

@@ -1,0 +1,133 @@
+"""Hierarchical Poisson–gamma model — paper §8.3.
+
+    a ~ Exponential(λ),  b ~ Gamma(α, β),
+    q_i ~ Gamma(a, b),   x_i ~ Poisson(q_i·t_i),   i = 1..N (N = 50,000).
+
+Two equivalent samplers are provided (criterion 3 — any MCMC works):
+
+1. **Marginalized HMC/MALA path** — q_i integrates out analytically
+   (negative-binomial likelihood), leaving the 2-d global θ = (log a, log b),
+   unconstrained as §6 requires (log transform + Jacobian):
+
+     x_i | a,b ~ NB:  log p = lgamma(x_i+a) − lgamma(a) − lgamma(x_i+1)
+                              + a·log(b/(b+t_i)) + x_i·log(t_i/(b+t_i))
+
+2. **Gibbs path** — explicit latents: q_i | a,b,x ~ Gamma(a+x_i, b+t_i) is
+   conjugate; b | a,q ~ Gamma(α+N·a, β+Σq_i) is conjugate; a | b,q via
+   MH-within-Gibbs. Only (log a, log b) are shared across machines, so the
+   combination stage sees d=2 regardless of N (latents are shard-local).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import gammaln
+
+Data = Dict[str, jnp.ndarray]
+
+# Hyperparameters (fixed, as the paper fixes λ, α, β before data generation).
+LAMBDA = 1.0  # a ~ Exponential(1)
+ALPHA = 2.0  # b ~ Gamma(2, 2)
+BETA = 2.0
+
+
+def generate_data(
+    key: jax.Array,
+    n: int = 50_000,
+    a_true: float = 2.0,
+    b_true: float = 1.0,
+    dtype=jnp.float32,
+) -> Tuple[Data, jnp.ndarray]:
+    k_q, k_x, k_t = jax.random.split(key, 3)
+    t = jnp.exp(0.3 * jax.random.normal(k_t, (n,), dtype))  # exposures t_i > 0
+    q = jax.random.gamma(k_q, a_true, (n,), dtype) / b_true
+    x = jax.random.poisson(k_x, q * t).astype(dtype)
+    true_theta = jnp.log(jnp.asarray([a_true, b_true], dtype))
+    return {"x": x, "t": t}, true_theta
+
+
+def log_prior(theta: jnp.ndarray) -> jnp.ndarray:
+    """Prior on θ=(log a, log b) incl. the log-transform Jacobians.
+
+    p(a) = λ e^{-λa};  p(b) = β^α b^{α-1} e^{-βb} / Γ(α);  |da/dθ| = a, etc.
+    """
+    log_a, log_b = theta[0], theta[1]
+    a, b = jnp.exp(log_a), jnp.exp(log_b)
+    lp_a = jnp.log(LAMBDA) - LAMBDA * a + log_a
+    lp_b = ALPHA * jnp.log(BETA) - gammaln(ALPHA) + (ALPHA - 1.0) * jnp.log(b) - BETA * b + log_b
+    return lp_a + lp_b
+
+
+def log_lik(theta: jnp.ndarray, data: Data) -> jnp.ndarray:
+    """Marginal (negative-binomial) log-likelihood summed over the shard."""
+    a, b = jnp.exp(theta[0]), jnp.exp(theta[1])
+    x, t = data["x"], data["t"]
+    return jnp.sum(
+        gammaln(x + a)
+        - gammaln(a)
+        - gammaln(x + 1.0)
+        + a * (jnp.log(b) - jnp.log(b + t))
+        + x * (jnp.log(t) - jnp.log(b + t))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Gibbs path (explicit latents) — used to demonstrate criterion 3
+# ---------------------------------------------------------------------------
+
+
+def gibbs_blocks(data: Data, num_shards: int, mh_step: float = 0.15):
+    """Block updates over position dict {"theta": (2,), "q": (n,)}.
+
+    The prior on (a,b) is raised to 1/M (subposterior, Eq. 2.1); the latent
+    q_i are shard-local so their conditionals are untouched by 1/M.
+    """
+    x, t = data["x"], data["t"]
+    n = x.shape[0]
+    inv_m = 1.0 / float(num_shards)
+
+    def update_q(key, pos):
+        a, b = jnp.exp(pos["theta"][0]), jnp.exp(pos["theta"][1])
+        # q_i | a,b,x ~ Gamma(a + x_i, rate b + t_i)
+        q = jax.random.gamma(key, a + x, (n,)) / (b + t)
+        return {**pos, "q": q}
+
+    def update_b(key, pos):
+        a = jnp.exp(pos["theta"][0])
+        # b | a, q ~ Gamma(α/M' + N a, β' + Σ q)  — prior tempered by 1/M:
+        # p(b)^{1/M} ∝ b^{(α-1)/M} e^{-βb/M}; conjugate with ∏ Gamma(q_i|a,b).
+        shape = (ALPHA - 1.0) * inv_m + 1.0 + n * a
+        rate = BETA * inv_m + jnp.sum(pos["q"])
+        b = jax.random.gamma(key, shape) / rate
+        theta = pos["theta"].at[1].set(jnp.log(b))
+        return {**pos, "theta": theta}
+
+    def update_a(key, pos):
+        # a | b, q: non-conjugate — random-walk MH on log a.
+        k_prop, k_acc = jax.random.split(key)
+        b = jnp.exp(pos["theta"][1])
+        q = pos["q"]
+
+        def cond(log_a):
+            a = jnp.exp(log_a)
+            prior = inv_m * (-LAMBDA * a) + log_a  # tempered Exp(λ) + Jacobian
+            lik = jnp.sum((a - 1.0) * jnp.log(q) + a * jnp.log(b) - gammaln(a))
+            return prior + lik
+
+        log_a = pos["theta"][0]
+        prop = log_a + mh_step * jax.random.normal(k_prop)
+        log_ratio = cond(prop) - cond(log_a)
+        accept = jnp.log(jax.random.uniform(k_acc)) < log_ratio
+        theta = pos["theta"].at[0].set(jnp.where(accept, prop, log_a))
+        return {**pos, "theta": theta}
+
+    return [update_q, update_b, update_a]
+
+
+def gibbs_init(key: jax.Array, data: Data) -> Dict[str, jnp.ndarray]:
+    n = data["x"].shape[0]
+    q0 = jnp.maximum(data["x"] / jnp.maximum(data["t"], 1e-6), 0.1)
+    return {"theta": jnp.zeros((2,)), "q": q0}

@@ -1,0 +1,12 @@
+"""Assigned LM architecture zoo (10 archs) as one composable model family."""
+
+from repro.models.lm.config import (  # noqa: F401
+    HybridConfig,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    reduced,
+)
+from repro.models.lm import model as model  # noqa: F401
+from repro.models.lm import steps as steps  # noqa: F401

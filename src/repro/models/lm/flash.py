@@ -1,0 +1,214 @@
+"""Flash attention in pure JAX (custom_vjp) — the memory-term workhorse.
+
+XLA does not fuse softmax(QKᵀ)V, so einsum attention materializes the (S,S)
+score matrix: at prefill_32k that is O(terabytes)/device — the cell would not
+fit at all. This module implements the FlashAttention-2 algorithm with
+``lax.scan`` tiling:
+
+- forward: online-softmax accumulation over KV tiles; saves only (out, lse);
+- backward: recomputes score tiles from (q,k,v,out,lse) — two tiled passes
+  (dq over KV tiles; dk/dv over Q tiles) so *no* O(S²) residual is ever
+  stored (a plain scan-based forward would stack per-step softmax residuals
+  and reintroduce the S² memory in the backward).
+
+GQA layout: q (B,S,K,G,hd), k/v (B,T,K,hd). MLA reuses this by concatenating
+nope⊕rope into one head dim. Numerics: tile scores/stats in fp32, matmul
+inputs in the model dtype. This is also the blueprint the Pallas TPU kernel
+would follow (q_chunk × kv_chunk ↦ VMEM BlockSpecs); on this rig the jnp
+form is what the dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def _tile_scores(qi, kj, scale):
+    # qi (b,qc,kh,g,hd), kj (b,tc,kh,hd) -> (b,kh,g,qc,tc) fp32
+    return jnp.einsum("bqkgd,btkd->bkgqt", qi, kj).astype(jnp.float32) * scale
+
+
+def _mask(scores, q_pos, kv_pos, kv_valid, causal):
+    m = kv_valid[None, :]
+    if causal:
+        m = m & (q_pos[:, None] >= kv_pos[None, :])
+    return jnp.where(m[None, None, None], scores, _NEG_INF)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, K, G, hd)
+    k: jnp.ndarray,  # (B, T, K, hd)
+    v: jnp.ndarray,  # (B, T, K, hd)
+    causal: bool = True,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+) -> jnp.ndarray:
+    out, _ = _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk)
+    return out
+
+
+def _pad_to(x, n, axis):
+    pad = n - x.shape[axis]
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk):
+    b, s, kh, g, hd = q.shape
+    t = k.shape[1]
+    hd_v = v.shape[-1]
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    n_q, n_kv = -(-s // q_chunk), -(-t // kv_chunk)
+    sp, tp = n_q * q_chunk, n_kv * kv_chunk
+    qp = _pad_to(q, sp, 1).reshape(b, n_q, q_chunk, kh, g, hd)
+    kp = _pad_to(k, tp, 1).reshape(b, n_kv, kv_chunk, kh, k.shape[-1])
+    vp = _pad_to(v, tp, 1).reshape(b, n_kv, kv_chunk, kh, v.shape[-1])
+    kv_pos = jnp.arange(tp).reshape(n_kv, kv_chunk)
+    kv_valid = kv_pos < t
+    q_positions = jnp.arange(sp).reshape(n_q, q_chunk)
+
+    def q_block(args):
+        qi, q_pos = args  # (b,qc,kh,g,hd), (qc,)
+
+        def kv_step(carry, inputs):
+            acc, m, denom = carry
+            kj, vj, pos_j, valid_j = inputs
+            scores = _mask(_tile_scores(qi, kj, scale), q_pos, pos_j, valid_j, causal)
+            m_new = jnp.maximum(m, scores.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(scores - m_new[..., None])
+            denom = denom * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p.astype(qi.dtype), vj
+            ).astype(jnp.float32)
+            return (acc, m_new, denom), None
+
+        acc0 = jnp.zeros((b, kh, g, q_chunk, hd_v), jnp.float32)
+        m0 = jnp.full((b, kh, g, q_chunk), _NEG_INF, jnp.float32)
+        d0 = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
+        (acc, m, denom), _ = jax.lax.scan(
+            kv_step,
+            (acc0, m0, d0),
+            (kp.swapaxes(0, 1), vp.swapaxes(0, 1), kv_pos, kv_valid),
+        )
+        denom = jnp.maximum(denom, 1e-30)
+        out = (acc / denom[..., None]).astype(q.dtype)
+        lse = m + jnp.log(denom)
+        return out, lse  # (b,kh,g,qc,hd), (b,kh,g,qc)
+
+    outs, lses = jax.lax.map(q_block, (qp.swapaxes(0, 1), q_positions))
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sp, kh, g, hd_v)[:, :s]
+    lse = lses.transpose(1, 0, 4, 2, 3).reshape(b, sp, kh, g)[:, :s]
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, q_chunk, kv_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_chunk, kv_chunk, res, dout):
+    q, k, v, out, lse = res
+    b, s, kh, g, hd = q.shape
+    hd_v = v.shape[-1]  # MLA: v head dim (128) ≠ qk head dim (nope⊕rope = 192)
+    t = k.shape[1]
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    n_q, n_kv = -(-s // q_chunk), -(-t // kv_chunk)
+    sp, tp = n_q * q_chunk, n_kv * kv_chunk
+
+    qp = _pad_to(q, sp, 1).reshape(b, n_q, q_chunk, kh, g, hd)
+    dop = _pad_to(dout, sp, 1).reshape(b, n_q, q_chunk, kh, g, hd_v)
+    # lse padding must keep exp(scores − lse) = 0 on padded rows
+    lsep = _pad_to(lse, sp, 1).reshape(b, n_q, q_chunk, kh, g)
+    # D_i = rowsum(dout ∘ out)  (b, s, kh, g)
+    dsum = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    dsump = _pad_to(dsum, sp, 1).reshape(b, n_q, q_chunk, kh, g)
+    kp = _pad_to(k, tp, 1).reshape(b, n_kv, kv_chunk, kh, k.shape[-1])
+    vp = _pad_to(v, tp, 1).reshape(b, n_kv, kv_chunk, kh, v.shape[-1])
+    kv_pos = jnp.arange(tp).reshape(n_kv, kv_chunk)
+    kv_valid = kv_pos < t
+    q_positions = jnp.arange(sp).reshape(n_q, q_chunk)
+
+    def p_tile(qi, kj, q_pos, pos_j, valid_j, lse_i):
+        scores = _mask(_tile_scores(qi, kj, scale), q_pos, pos_j, valid_j, causal)
+        # p = exp(scores − lse); padded q rows have lse=0, scores=-inf ⇒ p=0
+        return jnp.exp(scores - lse_i.transpose(0, 2, 3, 1)[..., None])
+
+    # ---- pass 1: dq over kv tiles ----------------------------------------
+    def dq_block(args):
+        qi, doi, lse_i, dsum_i, q_pos = args
+
+        def kv_step(dq_acc, inputs):
+            kj, vj, pos_j, valid_j = inputs
+            p = p_tile(qi, kj, q_pos, pos_j, valid_j, lse_i)  # (b,kh,g,qc,tc) f32
+            dp = jnp.einsum("bqkgd,btkd->bkgqt", doi, vj).astype(jnp.float32)
+            ds = p * (dp - dsum_i.transpose(0, 2, 3, 1)[..., None])  # (b,kh,g,qc,tc)
+            dq_acc = dq_acc + jnp.einsum(
+                "bkgqt,btkd->bqkgd", ds.astype(qi.dtype), kj
+            ).astype(jnp.float32)
+            return dq_acc, None
+
+        dq0 = jnp.zeros((b, q_chunk, kh, g, hd), jnp.float32)
+        dq_acc, _ = jax.lax.scan(
+            kv_step, dq0, (kp.swapaxes(0, 1), vp.swapaxes(0, 1), kv_pos, kv_valid)
+        )
+        return (dq_acc * scale).astype(q.dtype)
+
+    dqs = jax.lax.map(
+        dq_block,
+        (qp.swapaxes(0, 1), dop.swapaxes(0, 1), lsep.swapaxes(0, 1),
+         dsump.swapaxes(0, 1), q_positions),
+    )  # (n_q, b, qc, kh, g, hd)
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sp, kh, g, hd)[:, :s]
+
+    # ---- pass 2: dk/dv over q tiles ---------------------------------------
+    def dkv_block(args):
+        kj, vj, pos_j, valid_j = args
+
+        def q_step(carry, inputs):
+            dk_acc, dv_acc = carry
+            qi, doi, lse_i, dsum_i, q_pos = inputs
+            p = p_tile(qi, kj, q_pos, pos_j, valid_j, lse_i)
+            dv_acc = dv_acc + jnp.einsum(
+                "bkgqt,bqkgd->btkd", p.astype(q.dtype), doi
+            ).astype(jnp.float32)
+            dp = jnp.einsum("bqkgd,btkd->bkgqt", doi, vj).astype(jnp.float32)
+            ds = p * (dp - dsum_i.transpose(0, 2, 3, 1)[..., None])
+            dk_acc = dk_acc + jnp.einsum(
+                "bkgqt,bqkgd->btkd", ds.astype(q.dtype), qi
+            ).astype(jnp.float32)
+            return (dk_acc, dv_acc), None
+
+        dk0 = jnp.zeros((b, kv_chunk, kh, k.shape[-1]), jnp.float32)
+        dv0 = jnp.zeros((b, kv_chunk, kh, v.shape[-1]), jnp.float32)
+        (dk_acc, dv_acc), _ = jax.lax.scan(
+            q_step,
+            (dk0, dv0),
+            (qp.swapaxes(0, 1), dop.swapaxes(0, 1), lsep.swapaxes(0, 1),
+             dsump.swapaxes(0, 1), q_positions),
+        )
+        return (dk_acc * scale).astype(k.dtype), dv_acc.astype(v.dtype)
+
+    dks, dvs = jax.lax.map(
+        dkv_block, (kp.swapaxes(0, 1), vp.swapaxes(0, 1), kv_pos, kv_valid)
+    )  # (n_kv, b, tc, kh, hd)
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, tp, kh, k.shape[-1])[:, :t]
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, tp, kh, v.shape[-1])[:, :t]
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

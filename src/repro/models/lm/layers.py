@@ -1,0 +1,133 @@
+"""Primitive layers (functional, pytree params — no framework dependency).
+
+Conventions
+-----------
+- ``init_*`` return nested dicts of arrays; ``*_apply`` are pure functions.
+- Weight names follow a fixed vocabulary so the sharding policy
+  (:mod:`repro.distributed.sharding`) can pattern-match:
+  ``embed``, ``w_q/w_k/w_v/w_o``, ``w_gate/w_up/w_down``, ``experts_*``,
+  ``router``, ``lm_head``, ``scale`` ...
+- All matmuls compute in ``cfg.dtype`` (bf16 on TPU) with fp32 softmax/norm
+  accumulations where it matters.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Dict[str, jnp.ndarray]
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def init_linear(
+    key: jax.Array,
+    d_in: int,
+    d_out: int,
+    *,
+    dtype: str = "bfloat16",
+    bias: bool = False,
+    scale: Optional[float] = None,
+) -> PyTree:
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(_dtype(dtype))
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), _dtype(dtype))
+    return p
+
+
+def linear(p: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_rmsnorm(d: int, dtype: str = "bfloat16") -> PyTree:
+    return {"scale": jnp.ones((d,), _dtype(dtype))}
+
+
+def rmsnorm(p: PyTree, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype: str = "bfloat16") -> PyTree:
+    return {"scale": jnp.ones((d,), _dtype(dtype)), "bias": jnp.zeros((d,), _dtype(dtype))}
+
+
+def layernorm(p: PyTree, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10_000.0
+) -> jnp.ndarray:
+    """Rotate pairs. x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., 0::2], x32[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key: jax.Array, d: int, d_ff: int, dtype: str = "bfloat16") -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_linear(k1, d, d_ff, dtype=dtype)["w"],
+        "w_up": init_linear(k2, d, d_ff, dtype=dtype)["w"],
+        "w_down": init_linear(k3, d_ff, d, dtype=dtype)["w"],
+    }
+
+
+def mlp(p: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+    gate = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+    up = x @ p["w_up"].astype(x.dtype)
+    return (gate * up) @ p["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key: jax.Array, vocab: int, d: int, dtype: str = "bfloat16") -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(_dtype(dtype))
+
+
+def embed_lookup(table: jnp.ndarray, tokens: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    # One-hot-free gather; GSPMD shards the table on the vocab axis and turns
+    # this into a masked gather + all-reduce.
+    return jnp.take(table, tokens, axis=0).astype(compute_dtype)

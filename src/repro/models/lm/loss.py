@@ -1,0 +1,39 @@
+"""Token cross-entropy (+ z-loss, MoE aux) — sharded-vocab friendly.
+
+The log-softmax is written as explicit max/logsumexp reductions over the vocab
+axis so that when logits are sharded on the ``model`` axis GSPMD lowers them
+into partial reductions + small all-reduces instead of an all-gather of the
+(B, S, V) tensor.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(
+    logits: jnp.ndarray,  # (B, S, V)
+    labels: jnp.ndarray,  # (B, S) int32
+    *,
+    z_loss_coeff: float = 0.0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean next-token CE over all positions. Returns (loss, z_loss)."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - jax.lax.stop_gradient(m)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    label_logit = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - label_logit
+    loss = jnp.mean(nll)
+    zl = jnp.mean(lse**2) * z_loss_coeff if z_loss_coeff else jnp.zeros(())
+    return loss, zl
+
+
+def shift_labels(tokens: jnp.ndarray, pad_id: int = 0) -> jnp.ndarray:
+    """Next-token labels: labels[t] = tokens[t+1]; final position pads."""
+    return jnp.concatenate(
+        [tokens[:, 1:], jnp.full_like(tokens[:, :1], pad_id)], axis=1
+    )

@@ -1,0 +1,298 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD forward (train/prefill): within-chunk quadratic "attention-like"
+term + across-chunk linear recurrence carried by ``lax.scan``. All decays are
+expressed as ``exp(cumsum(log a))`` *differences* (≤ 0 ⇒ every exp ≤ 1 —
+numerically safe in bf16).
+
+Single-token decode keeps the recurrent state h (B, H, hd, N) and a causal-conv
+ring window — O(1) per token, which is why the ``long_500k`` cell runs on this
+family (DESIGN.md §4).
+
+TPU adaptations (vs the fused CUDA kernel):
+- The chunk-quadratic term is an MXU-shaped einsum (Q×Q tiles, Q a multiple of
+  128) and the inter-chunk recurrence is a scan over chunk states — the
+  natural VMEM-resident decomposition.
+- Projections are SPLIT per component (z/x/B/C/dt + per-component causal conv)
+  instead of Mamba's fused ``in_proj``: the concatenated output dim is not
+  divisible by the model axis (Jamba: 33048 ∤ 16) and mixes tensor-parallel
+  (z, x → d_inner, i.e. SSM heads) with replicated (B, C, dt) quantities.
+  Split weights give clean head-sharded TP with zero collectives inside the
+  SSD core (B/C are head-shared and replicated).
+- ``cfg.ssm.head_block`` runs the SSD core in head blocks under ``lax.map`` —
+  bounds the (B,L,Q,Q,H_blk) decay tensor (Jamba: 256 heads unblocked would be
+  ~17 GB/device at train_4k).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import ModelConfig
+from repro.models.lm.layers import init_linear, rmsnorm
+
+PyTree = Dict[str, jnp.ndarray]
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def init_mamba2(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads = _dims(cfg)
+    keys = jax.random.split(key, 8)
+    pd = cfg.param_dtype
+
+    def lin(k, i, o):
+        return init_linear(k, i, o, dtype=pd)["w"]
+
+    def conv_w(k, ch):
+        return (
+            jax.random.normal(k, (s.d_conv, ch), jnp.float32) * (1.0 / s.d_conv) ** 0.5
+        ).astype(jnp.dtype(pd))
+
+    p: PyTree = {
+        "w_z": lin(keys[0], d, d_inner),
+        "w_x": lin(keys[1], d, d_inner),
+        "w_B": lin(keys[2], d, s.d_state),
+        "w_C": lin(keys[3], d, s.d_state),
+        "w_dt": lin(keys[4], d, n_heads),
+        "conv_x": conv_w(keys[5], d_inner),
+        "conv_B": conv_w(keys[6], s.d_state),
+        "conv_C": conv_w(keys[7], s.d_state),
+        "conv_bias_x": jnp.zeros((d_inner,), jnp.dtype(pd)),
+        "conv_bias_B": jnp.zeros((s.d_state,), jnp.dtype(pd)),
+        "conv_bias_C": jnp.zeros((s.d_state,), jnp.dtype(pd)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        "dt_bias": jnp.log(
+            jnp.exp(
+                jnp.exp(
+                    jax.random.uniform(jax.random.fold_in(key, 99), (n_heads,), jnp.float32)
+                    * (jnp.log(s.dt_max) - jnp.log(s.dt_min))
+                    + jnp.log(s.dt_min)
+                )
+            )
+            - 1.0
+            + 1e-6
+        ),  # softplus^{-1}(dt_init)
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm": jnp.ones((d_inner,), jnp.dtype(pd)),
+        "w_out": lin(jax.random.fold_in(key, 100), d_inner, d),
+    }
+    return p
+
+
+def _causal_conv(conv_w, conv_b, u: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along axis 1. u: (B, S, C); kernel (K, C)."""
+    k = conv_w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(k):  # k = 4 — unrolled taps beat a conv op at this size
+        out = out + pad[:, i : i + u.shape[1], :] * conv_w[i].astype(u.dtype)
+    return out + conv_b.astype(u.dtype)
+
+
+def _project(p: PyTree, cfg: ModelConfig, x: jnp.ndarray, *, conv: bool = True):
+    """x (B,S,d) → z, xs, B, C (post-conv, silu), dt (fp32 softplus)."""
+    z = x @ p["w_z"].astype(x.dtype)
+    xs = x @ p["w_x"].astype(x.dtype)
+    b_ = x @ p["w_B"].astype(x.dtype)
+    c_ = x @ p["w_C"].astype(x.dtype)
+    dt = x @ p["w_dt"].astype(x.dtype)
+    if conv:
+        xs = jax.nn.silu(_causal_conv(p["conv_x"], p["conv_bias_x"], xs))
+        b_ = jax.nn.silu(_causal_conv(p["conv_B"], p["conv_bias_B"], b_))
+        c_ = jax.nn.silu(_causal_conv(p["conv_C"], p["conv_bias_C"], c_))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    return z, xs, b_, c_, dt
+
+
+def _ssd_core(
+    xh: jnp.ndarray,  # (B, L, Q, H, hd)
+    bh: jnp.ndarray,  # (B, L, Q, N)
+    ch: jnp.ndarray,  # (B, L, Q, N)
+    dtc: jnp.ndarray,  # (B, L, Q, H) fp32
+    cum: jnp.ndarray,  # (B, L, Q, H) fp32 inclusive cumulative log decay
+    out_dtype,
+) -> jnp.ndarray:
+    b, L, q, h, hd = xh.shape
+    # ---- intra-chunk (quadratic within Q) --------------------------------
+    cb = jnp.einsum("blqn,blpn->blqp", ch.astype(jnp.float32), bh.astype(jnp.float32))
+    # decay(i,j) = exp(cum_i − cum_j) for i ≥ j (diag includes a_i ... a_{j+1}).
+    # exp() is evaluated in f32 (cum differences span many decades) but the
+    # RESULT lies in [0,1] — safe to carry at bf16. Folding mask→exp→scale
+    # into one expression leaves a single (B,L,Q,Q,H) materialization in the
+    # activation dtype instead of several f32 ones (≈4× HBM-traffic cut on
+    # the dominant SSD term; EXPERIMENTS.md §Perf jamba iteration 1).
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,L,Q,Q,H) f32
+    mask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(mask, dec, -jnp.inf))
+    att = (
+        cb[..., None] * decay * dtc[:, :, None, :, :]
+    ).astype(out_dtype)  # (B,L,Q,Q,H) bf16
+    y_intra = jnp.einsum("blqph,blphd->blqhd", att, xh)
+
+    # ---- inter-chunk recurrence ------------------------------------------
+    # chunk summary: Σ_j exp(cum_Q − cum_j)·dt_j·B_j ⊗ x_j ; decay_chunk = exp(cum_Q)
+    chunk_dec = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,L,Q,H)
+    summary = jnp.einsum(
+        "blqh,blqn,blqhd->blhdn",
+        (chunk_dec * dtc).astype(jnp.float32),
+        bh.astype(jnp.float32),
+        xh.astype(jnp.float32),
+    )  # (B,L,H,hd,N)
+    total_dec = jnp.exp(cum[:, :, -1, :])  # (B,L,H)
+
+    def chunk_scan(hstate, inp):
+        summ, tdec = inp  # (B,H,hd,N), (B,H)
+        h_out = hstate  # state entering this chunk
+        h_new = hstate * tdec[..., None, None] + summ
+        return h_new, h_out
+
+    ds = bh.shape[-1]
+    h0 = jnp.zeros((b, h, hd, ds), jnp.float32)
+    _, h_states = jax.lax.scan(
+        chunk_scan, h0, (summary.swapaxes(0, 1), total_dec.swapaxes(0, 1))
+    )  # (L,B,H,hd,N) state at chunk start
+    h_states = h_states.swapaxes(0, 1)  # (B,L,H,hd,N)
+    y_inter = jnp.einsum(
+        "blqh,blqn,blhdn->blqhd", jnp.exp(cum), ch.astype(jnp.float32), h_states
+    ).astype(out_dtype)
+    return y_intra + y_inter  # (B,L,Q,H,hd)
+
+
+def mamba2_forward(p: PyTree, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Chunked SSD. x: (B, S, d) → (B, S, d). S must divide by cfg.ssm.chunk."""
+    s_cfg = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    hd, ds, q = s_cfg.head_dim, s_cfg.d_state, s_cfg.chunk
+    b, S, _ = x.shape
+    q = min(q, S)
+    assert S % q == 0, f"seq {S} not divisible by ssd chunk {q}"
+    L = S // q
+
+    z, xs, b_, c_, dt = _project(p, cfg, x)
+    a_log = -jnp.exp(p["A_log"]) * dt  # log a_t  (B,S,H), ≤ 0
+
+    xh = xs.reshape(b, L, q, n_heads, hd)
+    bh = b_.reshape(b, L, q, ds)
+    ch = c_.reshape(b, L, q, ds)
+    dtc = dt.reshape(b, L, q, n_heads)
+    cum = jnp.cumsum(a_log.reshape(b, L, q, n_heads), axis=2)
+
+    hb = s_cfg.head_block
+    if hb and hb < n_heads and n_heads % hb == 0:
+        nb = n_heads // hb
+        xh_b = xh.reshape(b, L, q, nb, hb, hd).transpose(3, 0, 1, 2, 4, 5)
+        dtc_b = dtc.reshape(b, L, q, nb, hb).transpose(3, 0, 1, 2, 4)
+        cum_b = cum.reshape(b, L, q, nb, hb).transpose(3, 0, 1, 2, 4)
+        y_b = jax.lax.map(
+            lambda args: _ssd_core(args[0], bh, ch, args[1], args[2], x.dtype),
+            (xh_b, dtc_b, cum_b),
+        )  # (nb, B, L, Q, hb, hd)
+        y = y_b.transpose(1, 2, 3, 0, 4, 5).reshape(b, L, q, n_heads, hd)
+    else:
+        y = _ssd_core(xh, bh, ch, dtc, cum, x.dtype)
+
+    y = y.reshape(b, S, n_heads, hd)
+    y = y + xs.reshape(b, S, n_heads, hd) * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, S, d_inner)
+    y = rmsnorm({"scale": p["norm"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["w_out"].astype(x.dtype)
+
+
+def ssm_state_after(p: PyTree, cfg: ModelConfig, x: jnp.ndarray) -> PyTree:
+    """Exact recurrent state after consuming x (B,S,d) — prefill cache."""
+    s_cfg = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    hd, ds = s_cfg.head_dim, s_cfg.d_state
+    b, S, _ = x.shape
+    # conv windows: last (d_conv−1) *pre-conv* component inputs
+    xs_raw = x @ p["w_x"].astype(x.dtype)
+    b_raw = x @ p["w_B"].astype(x.dtype)
+    c_raw = x @ p["w_C"].astype(x.dtype)
+    k = s_cfg.d_conv - 1
+    conv_state = {
+        "x": xs_raw[:, -k:, :],
+        "B": b_raw[:, -k:, :],
+        "C": c_raw[:, -k:, :],
+    }
+    _, xs, b_, c_, dt = _project(p, cfg, x)
+    a_log = -jnp.exp(p["A_log"]) * dt  # (B,S,H)
+    cum = jnp.cumsum(a_log, axis=1)
+    suffix = jnp.exp(cum[:, -1:, :] - cum)  # decay from t to end (B,S,H)
+    xh = xs.reshape(b, S, n_heads, hd).astype(jnp.float32)
+    h = jnp.einsum("bsh,bsn,bshd->bhdn", suffix * dt, b_.astype(jnp.float32), xh)
+    return {"conv": conv_state, "h": h}
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype) -> PyTree:
+    s = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    k = s.d_conv - 1
+    return {
+        "conv": {
+            "x": jnp.zeros((batch, k, d_inner), dtype),
+            "B": jnp.zeros((batch, k, s.d_state), dtype),
+            "C": jnp.zeros((batch, k, s.d_state), dtype),
+        },
+        "h": jnp.zeros((batch, n_heads, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def mamba2_decode(
+    p: PyTree, cfg: ModelConfig, x: jnp.ndarray, cache: PyTree
+) -> Tuple[jnp.ndarray, PyTree]:
+    """One-token recurrent step. x: (B, 1, d)."""
+    s_cfg = cfg.ssm
+    d_inner, n_heads = _dims(cfg)
+    hd, ds = s_cfg.head_dim, s_cfg.d_state
+    b = x.shape[0]
+    x0 = x[:, 0]
+    z = x0 @ p["w_z"].astype(x.dtype)
+    xs_raw = x0 @ p["w_x"].astype(x.dtype)
+    b_raw = x0 @ p["w_B"].astype(x.dtype)
+    c_raw = x0 @ p["w_C"].astype(x.dtype)
+    dt = x0 @ p["w_dt"].astype(x.dtype)
+
+    def conv_step(name, raw, conv_w, conv_b):
+        window = jnp.concatenate(
+            [cache["conv"][name].astype(x.dtype), raw[:, None]], axis=1
+        )  # (B, K, C)
+        out = jnp.einsum("bkc,kc->bc", window, conv_w.astype(x.dtype)) + conv_b.astype(
+            x.dtype
+        )
+        return jax.nn.silu(out), window[:, 1:]
+
+    xs, conv_x = conv_step("x", xs_raw, p["conv_x"], p["conv_bias_x"])
+    b_, conv_b_ = conv_step("B", b_raw, p["conv_B"], p["conv_bias_B"])
+    c_, conv_c = conv_step("C", c_raw, p["conv_C"], p["conv_bias_C"])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)  # (B,H)
+    xh = xs.reshape(b, n_heads, hd).astype(jnp.float32)
+    h = cache["h"] * a[..., None, None] + jnp.einsum(
+        "bh,bn,bhd->bhdn", dt, b_.astype(jnp.float32), xh
+    )
+    y = jnp.einsum("bn,bhdn->bhd", c_.astype(jnp.float32), h)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(b, d_inner).astype(x.dtype)
+    y = rmsnorm({"scale": p["norm"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ p["w_out"].astype(x.dtype))[:, None]
+    new_cache = {
+        "conv": {
+            "x": conv_x.astype(cache["conv"]["x"].dtype),
+            "B": conv_b_.astype(cache["conv"]["B"].dtype),
+            "C": conv_c.astype(cache["conv"]["C"].dtype),
+        },
+        "h": h,
+    }
+    return out, new_cache

@@ -1,0 +1,511 @@
+"""Model assembly for all assigned architectures.
+
+A model is a list of *layer groups*: each group is ``period`` heterogeneous
+block specs repeated ``repeat`` times, executed as ``lax.scan`` over stacked
+parameters (compile time and HLO size stay O(period), not O(num_layers) —
+essential for the 62/72-layer archs to compile on this rig).
+
+Families map to specs:
+- dense / vlm:  [attn+mlp] × L
+- moe:          [attn+moe] × L  (DeepSeek-V2: first layer attn+mlp unrolled)
+- ssm:          [mamba] × L
+- hybrid:       period-8 Jamba pattern (attn at index 4, MoE on odd layers)
+- encdec:       encoder stack (bidir attn+mlp) + decoder stack (causal
+                attn + cross-attn + mlp); the conv/audio frontend is a stub —
+                ``input_specs`` feeds precomputed frame embeddings.
+
+Three execution paths share the block definitions: ``forward`` (train),
+``prefill`` (forward + cache emission), ``decode_step`` (one token against
+caches). Caches are pytrees stacked like the parameter groups so the decode
+scan streams both together.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import attention as attn
+from repro.models.lm import mamba2 as m2
+from repro.models.lm import moe as moe_lib
+from repro.models.lm.config import ModelConfig
+from repro.models.lm.layers import (
+    embed_lookup,
+    init_embed,
+    init_mlp,
+    init_rmsnorm,
+    mlp,
+    rmsnorm,
+)
+
+PyTree = Any
+
+
+class LayerSpec(NamedTuple):
+    mixer: str  # "attn" | "mla" | "mamba"
+    ffn: str  # "mlp" | "moe" | "none"
+    cross: bool = False
+    causal: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    specs: Tuple[LayerSpec, ...]  # one period
+    repeat: int
+
+
+# ---------------------------------------------------------------------------
+# spec derivation
+# ---------------------------------------------------------------------------
+
+
+def layer_specs(cfg: ModelConfig) -> List[LayerSpec]:
+    moe_set = set(cfg.moe_layer_indices())
+    attn_set = set(cfg.attn_layer_indices())
+    specs = []
+    for i in range(cfg.num_layers):
+        if i in attn_set:
+            mixer = "mla" if cfg.mla is not None else "attn"
+        else:
+            mixer = "mamba"
+        if mixer == "mamba" and cfg.hybrid is None:
+            ffn = "none"  # pure Mamba blocks have no FFN
+        elif i in moe_set:
+            ffn = "moe"
+        else:
+            ffn = "mlp" if cfg.d_ff > 0 else "none"
+        specs.append(
+            LayerSpec(mixer=mixer, ffn=ffn, cross=(cfg.num_encoder_layers > 0))
+        )
+    return specs
+
+
+def layer_groups(cfg: ModelConfig) -> List[GroupSpec]:
+    specs = layer_specs(cfg)
+    n = len(specs)
+    if cfg.hybrid is not None:
+        p = cfg.hybrid.period
+        assert n % p == 0
+        return [GroupSpec(specs=tuple(specs[:p]), repeat=n // p)]
+    # leading irregular prefix (e.g. DeepSeek-V2 first dense layer)
+    prefix = 0
+    while prefix < n and specs[prefix] != specs[-1]:
+        prefix += 1
+    groups: List[GroupSpec] = []
+    if prefix:
+        groups.append(GroupSpec(specs=tuple(specs[:prefix]), repeat=1))
+    if n - prefix:
+        groups.append(GroupSpec(specs=(specs[-1],), repeat=n - prefix))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key: jax.Array, cfg: ModelConfig, spec: LayerSpec) -> PyTree:
+    keys = jax.random.split(key, 4)
+    p: Dict[str, PyTree] = {"ln1": init_rmsnorm(cfg.d_model, cfg.param_dtype)}
+    if spec.mixer == "attn":
+        p["attn"] = attn.init_gqa(keys[0], cfg)
+    elif spec.mixer == "mla":
+        p["attn"] = attn.init_mla(keys[0], cfg)
+    else:
+        p["mamba"] = m2.init_mamba2(keys[0], cfg)
+    if spec.cross:
+        p["ln_cross"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        p["cross"] = attn.init_cross(keys[1], cfg)
+    if spec.ffn == "mlp":
+        p["ln2"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        p["mlp"] = init_mlp(keys[2], cfg.d_model, cfg.d_ff, cfg.param_dtype)
+    elif spec.ffn == "moe":
+        p["ln2"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)
+        p["moe"] = moe_lib.init_moe(keys[3], cfg)
+    return p
+
+
+def _block_forward(
+    p: PyTree,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    memory: Optional[jnp.ndarray],
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        h = attn.gqa_forward(p["attn"], cfg, h, positions, causal=spec.causal)
+    elif spec.mixer == "mla":
+        h = attn.mla_forward(p["attn"], cfg, h, positions)
+    else:
+        h = m2.mamba2_forward(p["mamba"], cfg, h)
+    x = x + h
+    if spec.cross and memory is not None:
+        h = rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        x = x + attn.cross_forward(p["cross"], cfg, h, memory)
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn == "mlp":
+        x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+    elif spec.ffn == "moe":
+        y, aux = moe_lib.moe_forward(p["moe"], cfg, rmsnorm(p["ln2"], x, cfg.norm_eps))
+        x = x + y
+    return x, aux
+
+
+def _block_prefill(
+    p: PyTree,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    memory: Optional[jnp.ndarray],
+    max_len: int,
+) -> Tuple[jnp.ndarray, PyTree]:
+    """Forward + emit this layer's cache (padded to max_len)."""
+    b, s, _ = x.shape
+    h_in = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        q, k, v = attn._project_qkv(p["attn"], cfg, h_in, positions)
+        out = attn.sdpa(cfg, q, k, v, causal=spec.causal)
+        h = out.reshape(b, s, -1) @ p["attn"]["w_o"]["w"].astype(x.dtype)
+        pad = max_len - s
+        cache = {
+            "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        }
+    elif spec.mixer == "mla":
+        h = attn.mla_forward(p["attn"], cfg, h_in, positions)
+        c_kv, k_rope = attn._mla_latents(p["attn"], cfg, h_in, positions)
+        pad = max_len - s
+        cache = {
+            "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+            "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))),
+        }
+    else:
+        # Mamba prefill: chunked forward + exact state reconstruction.
+        h = m2.mamba2_forward(p["mamba"], cfg, h_in)
+        cache = m2.ssm_state_after(p["mamba"], cfg, h_in)
+    x = x + h
+    if spec.cross and memory is not None:
+        hc = rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        x = x + attn.cross_forward(p["cross"], cfg, hc, memory)
+    if spec.ffn == "mlp":
+        x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+    elif spec.ffn == "moe":
+        y, _ = moe_lib.moe_forward(p["moe"], cfg, rmsnorm(p["ln2"], x, cfg.norm_eps))
+        x = x + y
+    return x, cache
+
+
+def _block_decode(
+    p: PyTree,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    x: jnp.ndarray,  # (B, 1, d)
+    cache: PyTree,
+    position: jnp.ndarray,
+    memory: Optional[jnp.ndarray],
+) -> Tuple[jnp.ndarray, PyTree]:
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        h, cache = attn.gqa_decode(p["attn"], cfg, h, cache, position)
+    elif spec.mixer == "mla":
+        h, cache = attn.mla_decode(p["attn"], cfg, h, cache, position)
+    else:
+        h, cache = m2.mamba2_decode(p["mamba"], cfg, h, cache)
+    x = x + h
+    if spec.cross and memory is not None:
+        hc = rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        x = x + attn.cross_forward(p["cross"], cfg, hc, memory)
+    if spec.ffn == "mlp":
+        x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+    elif spec.ffn == "moe":
+        # decode MoE: capacity-dispatch EP keeps expert weights stationary
+        # (the gather path moves per-token weight matrices across shards —
+        # 249 GiB/step on deepseek-v2 decode_32k; see EXPERIMENTS.md §Perf).
+        moe_fn = (
+            moe_lib.moe_forward
+            if cfg.moe_decode_impl == "dispatch"
+            else moe_lib.moe_forward_gather
+        )
+        y, _ = moe_fn(p["moe"], cfg, rmsnorm(p["ln2"], x, cfg.norm_eps))
+        x = x + y
+    return x, cache
+
+
+def _init_cache_for_spec(
+    cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int, dtype
+) -> PyTree:
+    if spec.mixer == "attn":
+        return attn.init_gqa_cache(cfg, batch, max_len, dtype)
+    if spec.mixer == "mla":
+        return attn.init_mla_cache(cfg, batch, max_len, dtype)
+    return m2.init_mamba2_cache(cfg, batch, dtype)
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    groups = layer_groups(cfg)
+    k_embed, k_head, k_groups, k_enc, k_img = jax.random.split(key, 5)
+    params: Dict[str, PyTree] = {
+        "embed": init_embed(k_embed, cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size), jnp.float32)
+            * (1.0 / cfg.d_model) ** 0.5
+        ).astype(jnp.dtype(cfg.param_dtype))
+
+    gkeys = jax.random.split(k_groups, len(groups))
+    for gi, (gk, group) in enumerate(zip(gkeys, groups)):
+        def init_period(pk):
+            pkeys = jax.random.split(pk, len(group.specs))
+            return {
+                f"l{i}": _init_block(pkeys[i], cfg, spec)
+                for i, spec in enumerate(group.specs)
+            }
+
+        if group.repeat == 1:
+            params[f"g{gi}"] = init_period(gk)
+        else:
+            rkeys = jax.random.split(gk, group.repeat)
+            params[f"g{gi}"] = jax.vmap(init_period)(rkeys)
+
+    if cfg.num_encoder_layers:
+        enc_spec = LayerSpec(mixer="attn", ffn="mlp", cross=False, causal=False)
+        ekeys = jax.random.split(k_enc, cfg.num_encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda kk: {"l0": _init_block(kk, cfg, enc_spec)}
+        )(ekeys)
+        params["enc_norm"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)
+    if cfg.num_image_tokens:
+        d_vis = 1024  # stub vision tower output width
+        params["img_proj"] = (
+            jax.random.normal(k_img, (d_vis, cfg.d_model), jnp.float32) * (1.0 / d_vis) ** 0.5
+        ).astype(jnp.dtype(cfg.param_dtype))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# execution: train forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _seq_parallel_constraint(cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Megatron-style sequence parallelism: pin the residual stream's S axis
+    to the `model` mesh axis at block boundaries. GSPMD then lowers the TP
+    boundary collectives as reduce-scatter(+all-gather at consumers) instead
+    of full all-reduces of replicated activations — halving the boundary
+    bytes and sharding every norm/elementwise op between blocks 16-way."""
+    from jax.sharding import PartitionSpec as P
+
+    U = P.UNCONSTRAINED
+    try:
+        return jax.lax.with_sharding_constraint(x, P(U, "model", U))
+    except (ValueError, RuntimeError):  # no mesh in context (CPU unit tests)
+        return x
+
+
+def _run_groups(
+    params: PyTree,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    memory: Optional[jnp.ndarray],
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    aux_total = jnp.zeros((), jnp.float32)
+    for gi, group in enumerate(layer_groups(cfg)):
+        gparams = params[f"g{gi}"]
+
+        def period_fn(x, lparams):
+            aux = jnp.zeros((), jnp.float32)
+            for i, spec in enumerate(group.specs):
+                if cfg.seq_parallel:
+                    x = _seq_parallel_constraint(cfg, x)
+                x, a = _block_forward(lparams[f"l{i}"], cfg, spec, x, positions, memory)
+                aux = aux + a
+            return x, aux
+
+        period_fn = _maybe_remat(cfg, period_fn)
+        if group.repeat == 1:
+            x, aux = period_fn(x, gparams)
+            aux_total = aux_total + aux
+        else:
+
+            def scan_body(x, lparams):
+                return period_fn(x, lparams)
+
+            x, auxes = jax.lax.scan(scan_body, x, gparams)
+            aux_total = aux_total + jnp.sum(auxes)
+    return x, aux_total
+
+
+def _encode(params: PyTree, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """Whisper encoder over stub frame embeddings (B, T_enc, d)."""
+    enc_spec = LayerSpec(mixer="attn", ffn="mlp", cross=False, causal=False)
+    positions = jnp.broadcast_to(
+        jnp.arange(frames.shape[1]), frames.shape[:2]
+    )
+
+    def body(x, lparams):
+        x, _ = _block_forward(lparams["l0"], cfg, enc_spec, x, positions, None)
+        return x, None
+
+    x, _ = jax.lax.scan(body, frames, params["encoder"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _inputs_to_h(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    img_embeds: Optional[jnp.ndarray],
+) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """Token (+ image prefix) embedding; returns (h, positions, n_prefix)."""
+    compute = jnp.dtype(cfg.dtype)
+    h = embed_lookup(params["embed"], tokens, compute)
+    n_prefix = 0
+    if cfg.num_image_tokens and img_embeds is not None:
+        vis = (img_embeds.astype(compute) @ params["img_proj"].astype(compute))
+        h = jnp.concatenate([vis, h], axis=1)
+        n_prefix = img_embeds.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+    return h, positions, n_prefix
+
+
+def forward(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, S)
+    *,
+    img_embeds: Optional[jnp.ndarray] = None,  # (B, n_img, d_vis) vlm stub
+    enc_frames: Optional[jnp.ndarray] = None,  # (B, T_enc, d) audio stub
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training/eval forward → (logits (B, S_total, V), moe_aux_loss)."""
+    memory = None
+    if cfg.num_encoder_layers and enc_frames is not None:
+        memory = _encode(params, cfg, enc_frames.astype(jnp.dtype(cfg.dtype)))
+    h, positions, _ = _inputs_to_h(params, cfg, tokens, img_embeds)
+    h, aux = _run_groups(params, cfg, h, positions, memory)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = h @ head.astype(h.dtype)
+    return logits, aux
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype) -> PyTree:
+    caches: Dict[str, PyTree] = {}
+    for gi, group in enumerate(layer_groups(cfg)):
+        def one_period():
+            return {
+                f"l{i}": _init_cache_for_spec(cfg, spec, batch, max_len, dtype)
+                for i, spec in enumerate(group.specs)
+            }
+
+        entry = one_period()
+        if group.repeat > 1:
+            entry = jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (group.repeat,) + l.shape).copy(), entry
+            )
+        caches[f"g{gi}"] = entry
+    return caches
+
+
+def prefill(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    max_len: int,
+    *,
+    img_embeds: Optional[jnp.ndarray] = None,
+    enc_frames: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, PyTree, Optional[jnp.ndarray]]:
+    """Run the prompt, returning (last-token logits, caches, memory)."""
+    memory = None
+    if cfg.num_encoder_layers and enc_frames is not None:
+        memory = _encode(params, cfg, enc_frames.astype(jnp.dtype(cfg.dtype)))
+    h, positions, _ = _inputs_to_h(params, cfg, tokens, img_embeds)
+    caches: Dict[str, PyTree] = {}
+    for gi, group in enumerate(layer_groups(cfg)):
+        gparams = params[f"g{gi}"]
+
+        def period_prefill(x, lparams):
+            cc = {}
+            for i, spec in enumerate(group.specs):
+                x, c = _block_prefill(
+                    lparams[f"l{i}"], cfg, spec, x, positions, memory, max_len
+                )
+                cc[f"l{i}"] = c
+            return x, cc
+
+        if group.repeat == 1:
+            h, cache = period_prefill(h, gparams)
+        else:
+            h, cache = jax.lax.scan(period_prefill, h, gparams)
+        caches[f"g{gi}"] = cache
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = h[:, -1:] @ head.astype(h.dtype)
+    return logits, caches, memory
+
+
+def decode_step(
+    params: PyTree,
+    cfg: ModelConfig,
+    token: jnp.ndarray,  # (B, 1) the token generated at `position`-1
+    caches: PyTree,
+    position: jnp.ndarray,  # () write index into the caches
+    *,
+    memory: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, PyTree]:
+    """One decode step → (logits (B, 1, V), updated caches)."""
+    compute = jnp.dtype(cfg.dtype)
+    h = embed_lookup(params["embed"], token, compute)
+    new_caches: Dict[str, PyTree] = {}
+    for gi, group in enumerate(layer_groups(cfg)):
+        gparams = params[f"g{gi}"]
+        gcache = caches[f"g{gi}"]
+
+        def period_decode(x, scan_in):
+            lparams, lcache = scan_in
+            new_cc = {}
+            for i, spec in enumerate(group.specs):
+                x, c = _block_decode(
+                    lparams[f"l{i}"], cfg, spec, x, lcache[f"l{i}"], position, memory
+                )
+                new_cc[f"l{i}"] = c
+            return x, new_cc
+
+        if group.repeat == 1:
+            h, new_cache = period_decode(h, (gparams, gcache))
+        else:
+            h, new_cache = jax.lax.scan(period_decode, h, (gparams, gcache))
+        new_caches[f"g{gi}"] = new_cache
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = h @ head.astype(h.dtype)
+    return logits, new_caches

@@ -1,0 +1,173 @@
+"""Mixture-of-Experts FFN — GShard/Switch-style grouped one-hot dispatch.
+
+TPU-native design notes (vs a CUDA grouped-GEMM port):
+
+- Tokens are processed in *groups* of ``cfg.moe.group_size``; dispatch/combine
+  are one-hot einsums per group, which GSPMD partitions cleanly (experts on
+  the ``model`` axis → the dispatch einsum lowers to an all-to-all). This is
+  the canonical TPU MoE (GShard, Switch, GLaM) rather than sort-based CUDA
+  dispatch.
+- Dispatch-einsum overhead is 2·S·E·C_g·d FLOPs with C_g = cf·k·S_g/E, i.e.
+  a fraction  cf·S_g/(3·d_ff)  of the expert FLOPs — group_size is chosen per
+  arch to keep it ≤~10% and is a §Perf hillclimb knob.
+- Over-capacity tokens are *dropped* (their combine weight is 0 and the
+  residual path carries them), matching Switch semantics.
+
+Routing: softmax → top-k (renormalized when cfg.moe.router_normalize_topk),
+plus optional always-on shared experts (DeepSeek-V2). The load-balancing aux
+loss (Switch §2.2) is returned for the training loss.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.config import ModelConfig
+from repro.models.lm.layers import init_mlp, mlp
+
+PyTree = Dict[str, jnp.ndarray]
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    m = cfg.moe
+    d = cfg.d_model
+    k_router, k_experts, k_shared = jax.random.split(key, 3)
+    ke = jax.random.split(k_experts, 3)
+    scale = (1.0 / d) ** 0.5
+    p: PyTree = {
+        "router": (jax.random.normal(k_router, (d, m.num_experts), jnp.float32) * scale).astype(
+            jnp.dtype(cfg.param_dtype)
+        ),
+        "experts": {
+            "w_gate": (
+                jax.random.normal(ke[0], (m.num_experts, d, m.d_ff_expert), jnp.float32) * scale
+            ).astype(jnp.dtype(cfg.param_dtype)),
+            "w_up": (
+                jax.random.normal(ke[1], (m.num_experts, d, m.d_ff_expert), jnp.float32) * scale
+            ).astype(jnp.dtype(cfg.param_dtype)),
+            "w_down": (
+                jax.random.normal(ke[2], (m.num_experts, m.d_ff_expert, d), jnp.float32)
+                * (1.0 / m.d_ff_expert) ** 0.5
+            ).astype(jnp.dtype(cfg.param_dtype)),
+        },
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(
+            k_shared, d, m.num_shared_experts * m.d_ff_expert, dtype=cfg.param_dtype
+        )
+    return p
+
+
+def _capacity(cfg: ModelConfig, group: int) -> int:
+    m = cfg.moe
+    c = int(m.capacity_factor * m.top_k * group / m.num_experts) + 1
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4 (lane-friendly)
+
+
+def moe_forward(
+    p: PyTree, cfg: ModelConfig, x: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) → (y, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    tokens = x.reshape(-1, d)
+    n = tokens.shape[0]
+    g = min(m.group_size, n)
+    pad = (-n) % g
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    ng = tokens.shape[0] // g
+    tokens = tokens.reshape(ng, g, d)
+    cap = _capacity(cfg, g)
+    e = m.num_experts
+
+    logits = (tokens @ p["router"].astype(tokens.dtype)).astype(jnp.float32)  # (ng,g,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, m.top_k)  # (ng, g, k)
+    if m.router_normalize_topk:
+        top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Switch load-balancing aux loss: E·Σ_e f_e·P_e over all groups.
+    me = jnp.mean(probs, axis=(0, 1))  # mean router prob per expert
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_idx[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+        / (ng * g),
+        axis=0,
+    )
+    aux_loss = e * jnp.sum(me * ce)
+
+    dispatch = jnp.zeros((ng, g, e, cap), jnp.float32)
+    combine = jnp.zeros((ng, g, e, cap), jnp.float32)
+    counts = jnp.zeros((ng, e), jnp.float32)
+    for slot in range(m.top_k):
+        onehot = jax.nn.one_hot(top_idx[..., slot], e, dtype=jnp.float32)  # (ng,g,E)
+        pos = jnp.cumsum(onehot, axis=1) - 1.0 + counts[:, None, :]
+        keep = onehot * (pos < cap)
+        counts = counts + keep.sum(axis=1)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)  # (ng,g,E,C)
+        sel = keep[..., None] * pos_oh
+        dispatch = dispatch + sel
+        combine = combine + top_vals[..., slot][..., None, None] * sel
+
+    dx = dispatch.astype(tokens.dtype)
+    expert_in = jnp.einsum("gsec,gsd->egcd", dx, tokens)  # (E, ng, C, d)
+    w_gate = p["experts"]["w_gate"].astype(tokens.dtype)
+    w_up = p["experts"]["w_up"].astype(tokens.dtype)
+    w_down = p["experts"]["w_down"].astype(tokens.dtype)
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", expert_in, w_gate)) * jnp.einsum(
+        "egcd,edf->egcf", expert_in, w_up
+    )
+    expert_out = jnp.einsum("egcf,efd->egcd", h, w_down)
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(tokens.dtype), expert_out)
+
+    y = y.reshape(-1, d)
+    if pad:
+        y = y[:n]
+    y = y.reshape(b, s, d)
+    if "shared" in p:
+        y = y + mlp(p["shared"], x)
+    return y, aux_loss.astype(jnp.float32)
+
+
+def moe_forward_gather(
+    p: PyTree, cfg: ModelConfig, x: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dropless gather-based MoE for DECODE (few tokens): each token gathers
+    its top-k experts' weights directly — no capacity, no drops, bit-exact
+    routing. This is the serving-time semantics (capacity dropping is a
+    *training* batch effect); decode is memory-bound so the per-token weight
+    gather is the natural cost model.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    tokens = x.reshape(-1, d)  # (n, d)
+    logits = (tokens @ p["router"].astype(tokens.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, m.top_k)  # (n, k)
+    if m.router_normalize_topk:
+        top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    w_gate = p["experts"]["w_gate"].astype(tokens.dtype)  # (E, d, f)
+    w_up = p["experts"]["w_up"].astype(tokens.dtype)
+    w_down = p["experts"]["w_down"].astype(tokens.dtype)
+
+    def per_slot(slot):
+        idx = top_idx[:, slot]  # (n,)
+        g = jnp.take(w_gate, idx, axis=0)  # (n, d, f)
+        u = jnp.take(w_up, idx, axis=0)
+        dn = jnp.take(w_down, idx, axis=0)
+        h = jax.nn.silu(jnp.einsum("nd,ndf->nf", tokens, g)) * jnp.einsum(
+            "nd,ndf->nf", tokens, u
+        )
+        return jnp.einsum("nf,nfd->nd", h, dn) * top_vals[:, slot][:, None].astype(
+            tokens.dtype
+        )
+
+    y = sum(per_slot(slot) for slot in range(m.top_k))
+    y = y.reshape(b, s, d)
+    if "shared" in p:
+        y = y + mlp(p["shared"], x)
+    return y, jnp.zeros((), jnp.float32)

@@ -1,0 +1,127 @@
+"""Pure train / serve step functions (the units the launcher jits + shards).
+
+``train_step``  : CE (+ MoE aux + z-loss) → grads → AdamW. One optimizer
+                  step; the EP-MCMC (SGLD subposterior) variant lives in
+                  :mod:`repro.distributed.epmcmc` and reuses the same loss.
+``serve_prefill``: prompt pass → caches + first sampled token.
+``serve_decode_step``: one token against the caches (the decode_* /
+                  long_* dry-run cells lower THIS, not train_step).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import model as mdl
+from repro.models.lm.config import ModelConfig
+from repro.models.lm.loss import cross_entropy, shift_labels
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+
+PyTree = Any
+
+MOE_AUX_COEFF = 0.01
+Z_LOSS_COEFF = 1e-4
+
+
+def loss_fn(
+    params: PyTree, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, moe_aux = mdl.forward(
+        params,
+        cfg,
+        batch["tokens"],
+        img_embeds=batch.get("img_embeds"),
+        enc_frames=batch.get("enc_frames"),
+    )
+    labels = batch.get("labels")
+    if labels is None:
+        labels = shift_labels(batch["tokens"])
+    if cfg.num_image_tokens and "img_embeds" in batch:
+        # image prefix positions carry no next-token loss
+        logits = logits[:, cfg.num_image_tokens :]
+    ce, zl = cross_entropy(logits, labels, z_loss_coeff=Z_LOSS_COEFF)
+    total = ce + zl + MOE_AUX_COEFF * moe_aux
+    return total, {"ce": ce, "z_loss": zl, "moe_aux": moe_aux}
+
+
+def train_step(
+    params: PyTree,
+    opt_state: AdamWState,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    lr: float | jnp.ndarray = 3e-4,
+) -> Tuple[PyTree, AdamWState, Dict[str, jnp.ndarray]]:
+    (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, cfg, batch
+    )
+    new_params, new_opt = adamw_update(params, grads, opt_state, lr=lr)
+    metrics = dict(metrics, loss=total)
+    return new_params, new_opt, metrics
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig) -> Tuple[PyTree, AdamWState]:
+    params = mdl.init_params(key, cfg)
+    return params, adamw_init(params, state_dtype=jnp.dtype(cfg.opt_state_dtype))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+class DecodeState(NamedTuple):
+    caches: PyTree
+    position: jnp.ndarray  # () int32 — next cache write index
+    last_token: jnp.ndarray  # (B, 1)
+    memory: Optional[jnp.ndarray] = None  # whisper encoder output
+
+
+def serve_prefill(
+    params: PyTree,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    max_len: int,
+) -> DecodeState:
+    logits, caches, memory = mdl.prefill(
+        params,
+        cfg,
+        batch["tokens"],
+        max_len,
+        img_embeds=batch.get("img_embeds"),
+        enc_frames=batch.get("enc_frames"),
+    )
+    token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    seq = batch["tokens"].shape[1] + (
+        cfg.num_image_tokens if "img_embeds" in batch else 0
+    )
+    return DecodeState(
+        caches=caches,
+        position=jnp.asarray(seq, jnp.int32),
+        last_token=token,
+        memory=memory,
+    )
+
+
+def serve_decode_step(
+    params: PyTree, cfg: ModelConfig, state: DecodeState
+) -> Tuple[DecodeState, jnp.ndarray]:
+    """Greedy one-token step; returns (new state, logits (B, 1, V))."""
+    logits, caches = mdl.decode_step(
+        params,
+        cfg,
+        state.last_token,
+        state.caches,
+        state.position,
+        memory=state.memory,
+    )
+    token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    new_state = DecodeState(
+        caches=caches,
+        position=state.position + 1,
+        last_token=token,
+        memory=state.memory,
+    )
+    return new_state, logits

@@ -1,0 +1,8 @@
+"""Optimizers + distributed-optimization tricks (no external deps)."""
+
+from repro.optim.adamw import adamw_init, adamw_update  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    compress_lowrank,
+    decompress_lowrank,
+    error_feedback_update,
+)

@@ -1,0 +1,77 @@
+"""AdamW (decoupled weight decay), pytree-native, fp32 state.
+
+State is kept in fp32 regardless of param dtype (bf16 params — standard mixed
+precision). The sharding policy places optimizer state on the same
+PartitionSpec as its parameter, plus ZeRO-1 sharding of the state over the
+``data`` axis when ``fsdp`` is enabled in the arch config.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jnp.ndarray
+
+
+def adamw_init(params: PyTree, *, state_dtype=jnp.float32) -> AdamWState:
+    """``state_dtype``: fp32 default; the 236B/398B archs use bf16 states so
+    (params + μ + ν) fits v5e HBM at 256 chips (see DESIGN.md §5). The update
+    arithmetic is always fp32; only storage is cast."""
+    sd = jnp.dtype(state_dtype)
+    return AdamWState(
+        mu=jax.tree.map(lambda p: jnp.zeros(p.shape, sd), params),
+        nu=jax.tree.map(lambda p: jnp.zeros(p.shape, sd), params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamw_update(
+    params: PyTree,
+    grads: PyTree,
+    state: AdamWState,
+    *,
+    lr: float | jnp.ndarray = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Tuple[PyTree, AdamWState]:
+    count = state.count + 1
+    if grad_clip:
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    mu = jax.tree.map(
+        lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)).astype(m.dtype),
+        state.mu,
+        grads,
+    )
+    nu = jax.tree.map(
+        lambda v, g: (
+            b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g.astype(jnp.float32))
+        ).astype(v.dtype),
+        state.nu,
+        grads,
+    )
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, m, v):
+        step = (m.astype(jnp.float32) / c1) / (jnp.sqrt(v.astype(jnp.float32) / c2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(mu=mu, nu=nu, count=count)

@@ -1,0 +1,77 @@
+"""Gradient compression for the synchronous (``--mode sgd``) baseline.
+
+PowerSGD-style rank-r compression with error feedback (Vogels et al. 2019):
+matrices are factored G ≈ P Qᵀ by one subspace iteration; the all-reduce then
+moves r·(n+m) floats instead of n·m — directly attacking the collective
+roofline term the paper's EP-MCMC mode eliminates entirely. Error feedback
+accumulates the compression residual so convergence is preserved.
+
+This is a *beyond-paper* distributed-optimization trick: the paper removes the
+gradient all-reduce altogether; for users who still want synchronous SGD this
+shrinks it. Non-matrix leaves (biases, norms) pass through uncompressed.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class LowRankPair(NamedTuple):
+    p: jnp.ndarray  # (n, r)
+    q: jnp.ndarray  # (m, r)
+
+
+def compress_lowrank(
+    key: jax.Array, grad: jnp.ndarray, rank: int
+) -> Tuple[LowRankPair, jnp.ndarray]:
+    """One-shot subspace iteration. grad (n, m) → (P, Q), residual."""
+    n, m = grad.shape[-2], grad.shape[-1]
+    g2 = grad.reshape(-1, m) if grad.ndim > 2 else grad
+    q0 = jax.random.normal(key, (m, rank), jnp.float32)
+    p = g2.astype(jnp.float32) @ q0  # (n', r)
+    # Orthonormalize p (Gram-Schmidt via QR) for a stable projection.
+    p, _ = jnp.linalg.qr(p)
+    q = g2.astype(jnp.float32).T @ p  # (m, r)
+    approx = (p @ q.T).astype(grad.dtype).reshape(grad.shape)
+    return LowRankPair(p=p, q=q), grad - approx
+
+
+def decompress_lowrank(pair: LowRankPair, shape) -> jnp.ndarray:
+    return (pair.p @ pair.q.T).reshape(shape)
+
+
+def error_feedback_update(
+    key: jax.Array,
+    grads: PyTree,
+    error: PyTree,
+    rank: int = 8,
+) -> Tuple[PyTree, PyTree]:
+    """Compress+decompress every ≥2-d leaf with error feedback.
+
+    Returns (compressed-approx grads to all-reduce, new error buffers).
+    In the mesh runtime the P/Q factors are what cross the ``data`` axis;
+    here we return the already-decompressed approximation so callers can
+    psum it directly (bytes accounting happens at the collective layer).
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(error)
+    keys = jax.random.split(key, len(leaves))
+    out, new_err = [], []
+    for k, g, e in zip(keys, leaves, err_leaves):
+        if g.ndim >= 2 and min(g.shape[-2], g.shape[-1]) > rank:
+            pair, resid = compress_lowrank(k, g + e.astype(g.dtype), rank)
+            out.append(decompress_lowrank(pair, g.shape).astype(g.dtype))
+            new_err.append(resid.astype(e.dtype))
+        else:
+            out.append(g)
+            new_err.append(jnp.zeros_like(e))
+    return jax.tree.unflatten(treedef, out), jax.tree.unflatten(treedef, new_err)
+
+
+def init_error_feedback(grads_like: PyTree) -> PyTree:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)

@@ -1,0 +1,14 @@
+"""Any-MCMC substrate (paper criterion 3: each machine may use any sampler).
+
+All kernels share the ``(init, step)`` protocol of :mod:`repro.samplers.base`
+and are pytree-generic; chains are driven by :func:`repro.samplers.base.run_chain`
+(jit/scan) and batched with :func:`repro.samplers.base.run_chains` (vmap).
+"""
+
+from repro.samplers import base as base  # noqa: F401
+from repro.samplers.base import run_chain, run_chains  # noqa: F401
+from repro.samplers.gibbs import gibbs_kernel  # noqa: F401
+from repro.samplers.hmc import hmc_kernel, window_adaptation  # noqa: F401
+from repro.samplers.mala import mala_kernel  # noqa: F401
+from repro.samplers.rwmh import rwmh_kernel  # noqa: F401
+from repro.samplers.sgld import sgld_kernel  # noqa: F401

@@ -1,0 +1,145 @@
+"""Sampler protocol + chain drivers.
+
+A *kernel* is a ``MCMCKernel(init, step)`` pair:
+
+- ``init(position) -> state``            (state.position must exist)
+- ``step(key, state) -> (state, info)``  (one MCMC transition)
+
+Positions are arbitrary pytrees. ``run_chain`` drives one chain under
+``lax.scan`` with burn-in and thinning; ``run_chains`` vmaps independent
+chains (the paper's per-machine samplers are one ``run_chain`` per shard —
+on the mesh, ``repro.distributed.epmcmc`` shard_maps it over the data axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+LogDensityFn = Callable[[PyTree], jnp.ndarray]
+
+
+class MCMCKernel(NamedTuple):
+    init: Callable[[PyTree], Any]
+    step: Callable[[jax.Array, Any], Tuple[Any, Any]]
+
+
+class StepInfo(NamedTuple):
+    """Uniform per-step diagnostics across kernels."""
+
+    accept_prob: jnp.ndarray
+    is_accepted: jnp.ndarray
+    log_density: jnp.ndarray
+
+
+# -- pytree numerics ---------------------------------------------------------
+
+
+def tree_random_normal(key: jax.Array, tree: PyTree) -> PyTree:
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef,
+        [jax.random.normal(k, l.shape, l.dtype) for k, l in zip(keys, leaves)],
+    )
+
+
+def tree_axpy(a, x: PyTree, y: PyTree) -> PyTree:
+    """a*x + y elementwise over pytrees (a scalar or matching pytree)."""
+    if isinstance(a, (int, float)) or (hasattr(a, "ndim") and a.ndim == 0):
+        return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+    return jax.tree.map(lambda ai, xi, yi: ai * xi + yi, a, x, y)
+
+
+def tree_scale(a, x: PyTree) -> PyTree:
+    if isinstance(a, (int, float)) or (hasattr(a, "ndim") and a.ndim == 0):
+        return jax.tree.map(lambda xi: a * xi, x)
+    return jax.tree.map(lambda ai, xi: ai * xi, a, x)
+
+
+def tree_add(x: PyTree, y: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, x, y)
+
+
+def tree_sub(x: PyTree, y: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, x, y)
+
+
+def tree_vdot(x: PyTree, y: PyTree) -> jnp.ndarray:
+    parts = jax.tree.map(lambda xi, yi: jnp.vdot(xi, yi), x, y)
+    return jax.tree.reduce(jnp.add, parts, jnp.zeros(()))
+
+
+def tree_where(pred: jnp.ndarray, x: PyTree, y: PyTree) -> PyTree:
+    return jax.tree.map(lambda xi, yi: jnp.where(pred, xi, yi), x, y)
+
+
+# -- chain drivers -----------------------------------------------------------
+
+
+def run_chain(
+    key: jax.Array,
+    kernel: MCMCKernel,
+    position: PyTree,
+    num_samples: int,
+    *,
+    burn_in: int = 0,
+    thin: int = 1,
+) -> Tuple[PyTree, StepInfo]:
+    """Drive one chain; returns stacked positions ``(num_samples, ...)`` + info.
+
+    Burn-in follows the paper's fixed rule (callers discard 1/6 by default at
+    the experiment layer); ``thin`` keeps every thin-th post-burn-in draw.
+    """
+    state = kernel.init(position)
+
+    def one_step(state, key):
+        return kernel.step(key, state)
+
+    if burn_in > 0:
+        keys = jax.random.split(key, burn_in + 1)
+        key = keys[0]
+
+        def warm(state, k):
+            state, _ = kernel.step(k, state)
+            return state, None
+
+        state, _ = jax.lax.scan(warm, state, keys[1:])
+
+    def collect(state, k):
+        if thin == 1:
+            state, info = one_step(state, k)
+        else:
+            ks = jax.random.split(k, thin)
+
+            def inner(s, kk):
+                s, info = one_step(s, kk)
+                return s, info
+
+            state, infos = jax.lax.scan(inner, state, ks)
+            info = jax.tree.map(lambda x: x[-1], infos)
+        return state, (state.position, info)
+
+    keys = jax.random.split(key, num_samples)
+    _, (positions, infos) = jax.lax.scan(collect, state, keys)
+    return positions, infos
+
+
+def run_chains(
+    key: jax.Array,
+    kernel: MCMCKernel,
+    positions: PyTree,
+    num_samples: int,
+    *,
+    burn_in: int = 0,
+    thin: int = 1,
+) -> Tuple[PyTree, StepInfo]:
+    """vmap of :func:`run_chain` over a leading chain axis of ``positions``."""
+    n_chains = jax.tree.leaves(positions)[0].shape[0]
+    keys = jax.random.split(key, n_chains)
+    return jax.vmap(
+        lambda k, p: run_chain(k, kernel, p, num_samples, burn_in=burn_in, thin=thin)
+    )(keys, positions)

@@ -1,0 +1,74 @@
+"""Generic Gibbs / Metropolis-within-Gibbs composition.
+
+A Gibbs kernel is assembled from *block updates*: callables
+``update(key, position) -> position`` that resample one block of the position
+pytree from its full conditional (or perform an MH-within-Gibbs move for
+non-conjugate blocks). The hierarchical Poisson–gamma model (paper §8.3)
+supplies conjugate ``q_i | a,b,x`` updates and MH moves for ``a, b``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.samplers.base import LogDensityFn, MCMCKernel, PyTree, StepInfo
+
+BlockUpdate = Callable[[jax.Array, PyTree], PyTree]
+
+
+class GibbsState(NamedTuple):
+    position: PyTree
+
+
+def gibbs_kernel(
+    block_updates: Sequence[BlockUpdate],
+    logdensity: LogDensityFn | None = None,
+) -> MCMCKernel:
+    """Compose block updates into one sweep; ``logdensity`` is only used to
+    report diagnostics (Gibbs sweeps always "accept")."""
+
+    def init(position: PyTree) -> GibbsState:
+        return GibbsState(position=position)
+
+    def step(key: jax.Array, state: GibbsState):
+        keys = jax.random.split(key, len(block_updates))
+        position = state.position
+        for update, k in zip(block_updates, keys):
+            position = update(k, position)
+        ld = logdensity(position) if logdensity is not None else jnp.zeros(())
+        info = StepInfo(
+            accept_prob=jnp.ones(()), is_accepted=jnp.ones((), bool), log_density=ld
+        )
+        return GibbsState(position=position), info
+
+    return MCMCKernel(init=init, step=step)
+
+
+def mh_within_gibbs_update(
+    conditional_logdensity: Callable[[PyTree], jnp.ndarray],
+    select: Callable[[PyTree], jnp.ndarray],
+    replace: Callable[[PyTree, jnp.ndarray], PyTree],
+    step_size: float = 0.1,
+) -> BlockUpdate:
+    """Random-walk MH update of one block (for non-conjugate conditionals).
+
+    ``select(position)`` extracts the block array; ``replace(position, block)``
+    writes it back; ``conditional_logdensity(position)`` is the joint (any
+    terms constant in the block cancel).
+    """
+
+    def update(key: jax.Array, position: PyTree) -> PyTree:
+        k_prop, k_acc = jax.random.split(key)
+        block = select(position)
+        proposal_block = block + step_size * jax.random.normal(
+            k_prop, block.shape, block.dtype
+        )
+        proposal = replace(position, proposal_block)
+        log_ratio = conditional_logdensity(proposal) - conditional_logdensity(position)
+        accepted = jnp.log(jax.random.uniform(k_acc)) < log_ratio
+        return jax.tree.map(lambda p, q: jnp.where(accepted, q, p), position, proposal)
+
+    return update

@@ -1,0 +1,252 @@
+"""Hamiltonian Monte Carlo with leapfrog integration + Stan-style warmup.
+
+The paper samples subposteriors with Stan's HMC/NUTS; this is the in-JAX
+equivalent. ``window_adaptation`` performs dual-averaging step-size adaptation
+(target accept 0.8) with Welford diagonal-metric estimation — a simplified
+two-phase version of Stan's windowed scheme that runs entirely under
+``lax.scan`` (jit-able, so it can run per-chain inside ``shard_map``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.samplers.base import (
+    LogDensityFn,
+    MCMCKernel,
+    PyTree,
+    StepInfo,
+    tree_add,
+    tree_random_normal,
+    tree_scale,
+    tree_vdot,
+    tree_where,
+)
+
+
+class HMCState(NamedTuple):
+    position: PyTree
+    log_density: jnp.ndarray
+    grad: PyTree
+
+
+def _kinetic(momentum: PyTree, inv_mass: PyTree) -> jnp.ndarray:
+    return 0.5 * tree_vdot(momentum, jax.tree.map(jnp.multiply, inv_mass, momentum))
+
+
+def hmc_kernel(
+    logdensity: LogDensityFn,
+    step_size: float | jnp.ndarray = 0.1,
+    num_integration_steps: int = 16,
+    inv_mass: Optional[PyTree] = None,
+    *,
+    jitter_steps: bool = True,
+) -> MCMCKernel:
+    """Fixed-length HMC. ``jitter_steps`` uniformly jitters the trajectory
+    length in [1, L] per transition (cheap anti-resonance, standard practice).
+    """
+    value_and_grad = jax.value_and_grad(logdensity)
+
+    def init(position: PyTree) -> HMCState:
+        ld, g = value_and_grad(position)
+        return HMCState(position=position, log_density=ld, grad=g)
+
+    def step(key: jax.Array, state: HMCState):
+        k_mom, k_acc, k_len = jax.random.split(key, 3)
+        im = (
+            inv_mass
+            if inv_mass is not None
+            else jax.tree.map(jnp.ones_like, state.position)
+        )
+        # p ~ N(0, M): sample standard normal and scale by sqrt(mass)=1/sqrt(im)
+        raw = tree_random_normal(k_mom, state.position)
+        momentum = jax.tree.map(lambda r, i: r / jnp.sqrt(i), raw, im)
+        if jitter_steps:
+            L = jax.random.randint(k_len, (), 1, num_integration_steps + 1)
+        else:
+            L = num_integration_steps
+
+        def do_leapfrog(q, p, g, n):
+            def body(carry, i):
+                q, p, g, ld = carry
+                active = i < n
+                p_half = tree_add(p, tree_scale(0.5 * step_size, g))
+                q_new = tree_add(
+                    q, tree_scale(step_size, jax.tree.map(jnp.multiply, im, p_half))
+                )
+                ld_new, g_new = value_and_grad(q_new)
+                p_new = tree_add(p_half, tree_scale(0.5 * step_size, g_new))
+                q = tree_where(active, q_new, q)
+                p = tree_where(active, p_new, p)
+                g = tree_where(active, g_new, g)
+                ld = jnp.where(active, ld_new, ld)
+                return (q, p, g, ld), None
+
+            (q, p, g, ld), _ = jax.lax.scan(
+                body, (q, p, g, state.log_density), jnp.arange(num_integration_steps)
+            )
+            return q, p, g, ld
+
+        q_new, p_new, g_new, ld_new = do_leapfrog(
+            state.position, momentum, state.grad, L
+        )
+        h_old = -state.log_density + _kinetic(momentum, im)
+        h_new = -ld_new + _kinetic(p_new, im)
+        log_ratio = h_old - h_new
+        log_ratio = jnp.where(jnp.isfinite(log_ratio), log_ratio, -jnp.inf)
+        accept_prob = jnp.minimum(1.0, jnp.exp(jnp.minimum(log_ratio, 0.0)))
+        accepted = jnp.log(jax.random.uniform(k_acc)) < log_ratio
+        new_state = HMCState(
+            position=tree_where(accepted, q_new, state.position),
+            log_density=jnp.where(accepted, ld_new, state.log_density),
+            grad=tree_where(accepted, g_new, state.grad),
+        )
+        return new_state, StepInfo(accept_prob, accepted, new_state.log_density)
+
+    return MCMCKernel(init=init, step=step)
+
+
+# ---------------------------------------------------------------------------
+# warmup: dual averaging + Welford diagonal metric
+# ---------------------------------------------------------------------------
+
+
+class DualAveragingState(NamedTuple):
+    log_eps: jnp.ndarray
+    log_eps_avg: jnp.ndarray
+    h_avg: jnp.ndarray
+    step: jnp.ndarray
+    mu: jnp.ndarray
+
+
+def da_init(initial_step_size: float) -> DualAveragingState:
+    log_eps = jnp.log(jnp.asarray(initial_step_size))
+    return DualAveragingState(
+        log_eps=log_eps,
+        log_eps_avg=jnp.zeros(()),
+        h_avg=jnp.zeros(()),
+        step=jnp.zeros(()),
+        mu=jnp.log(10.0) + log_eps,
+    )
+
+
+def da_update(
+    state: DualAveragingState, accept_prob: jnp.ndarray, target: float = 0.8
+) -> DualAveragingState:
+    """Nesterov dual averaging (Hoffman & Gelman 2011, Alg. 5 constants)."""
+    t0, gamma, kappa = 10.0, 0.05, 0.75
+    step = state.step + 1.0
+    eta_h = 1.0 / (step + t0)
+    h_avg = (1.0 - eta_h) * state.h_avg + eta_h * (target - accept_prob)
+    log_eps = state.mu - jnp.sqrt(step) / gamma * h_avg
+    eta_x = step ** (-kappa)
+    log_eps_avg = eta_x * log_eps + (1.0 - eta_x) * state.log_eps_avg
+    return DualAveragingState(log_eps, log_eps_avg, h_avg, step, state.mu)
+
+
+def window_adaptation(
+    logdensity: LogDensityFn,
+    position: PyTree,
+    key: jax.Array,
+    num_steps: int = 500,
+    *,
+    num_integration_steps: int = 16,
+    initial_step_size: float = 0.1,
+    target_accept: float = 0.8,
+) -> Tuple[PyTree, jnp.ndarray, PyTree]:
+    """Two-phase warmup. Returns (position, step_size, inv_mass).
+
+    Phase 1 (first half): adapt ε by dual averaging with unit metric while
+    accumulating Welford variance of the position. Phase 2 (second half):
+    freeze the diagonal metric to the Welford variance, re-adapt ε.
+    """
+    value_and_grad = jax.value_and_grad(logdensity)
+    half = num_steps // 2
+
+    # A light inline HMC step so ε and the metric can be traced values.
+    def hmc_step(key, q, ld, g, eps, inv_mass):
+        k_mom, k_acc, k_len = jax.random.split(key, 3)
+        raw = tree_random_normal(k_mom, q)
+        p = jax.tree.map(lambda r, i: r / jnp.sqrt(i), raw, inv_mass)
+        n = jax.random.randint(k_len, (), 1, num_integration_steps + 1)
+
+        def body(carry, i):
+            q_, p_, g_, ld_ = carry
+            active = i < n
+            p_half = tree_add(p_, tree_scale(0.5 * eps, g_))
+            q_new = tree_add(q_, tree_scale(eps, jax.tree.map(jnp.multiply, inv_mass, p_half)))
+            ld_new, g_new = value_and_grad(q_new)
+            p_new = tree_add(p_half, tree_scale(0.5 * eps, g_new))
+            return (
+                tree_where(active, q_new, q_),
+                tree_where(active, p_new, p_),
+                tree_where(active, g_new, g_),
+                jnp.where(active, ld_new, ld_),
+            ), None
+
+        (q2, p2, g2, ld2), _ = jax.lax.scan(
+            body, (q, p, g, ld), jnp.arange(num_integration_steps)
+        )
+        log_ratio = (-ld + _kinetic(p, inv_mass)) - (-ld2 + _kinetic(p2, inv_mass))
+        log_ratio = jnp.where(jnp.isfinite(log_ratio), log_ratio, -jnp.inf)
+        a_prob = jnp.minimum(1.0, jnp.exp(jnp.minimum(log_ratio, 0.0)))
+        acc = jnp.log(jax.random.uniform(k_acc)) < log_ratio
+        return (
+            tree_where(acc, q2, q),
+            jnp.where(acc, ld2, ld),
+            tree_where(acc, g2, g),
+            a_prob,
+        )
+
+    ld0, g0 = value_and_grad(position)
+    unit_mass = jax.tree.map(jnp.ones_like, position)
+
+    # Phase 1 -----------------------------------------------------------
+    def phase1(carry, key):
+        q, ld, g, da, w_count, w_mean, w_m2 = carry
+        eps = jnp.exp(da.log_eps)
+        q, ld, g, a_prob = hmc_step(key, q, ld, g, eps, unit_mass)
+        da = da_update(da, a_prob, target_accept)
+        # Welford over positions
+        w_count = w_count + 1.0
+        delta = jax.tree.map(jnp.subtract, q, w_mean)
+        w_mean = jax.tree.map(lambda m, d: m + d / w_count, w_mean, delta)
+        delta2 = jax.tree.map(jnp.subtract, q, w_mean)
+        w_m2 = jax.tree.map(lambda m2, d, d2: m2 + d * d2, w_m2, delta, delta2)
+        return (q, ld, g, da, w_count, w_mean, w_m2), a_prob
+
+    zeros = jax.tree.map(jnp.zeros_like, position)
+    carry = (
+        position,
+        ld0,
+        g0,
+        da_init(initial_step_size),
+        jnp.zeros(()),
+        zeros,
+        jax.tree.map(jnp.zeros_like, position),
+    )
+    keys1 = jax.random.split(key, half + 1)
+    carry, _ = jax.lax.scan(phase1, carry, keys1[1:])
+    q, ld, g, da, w_count, w_mean, w_m2 = carry
+    var = jax.tree.map(
+        lambda m2: m2 / jnp.maximum(w_count - 1.0, 1.0) + 1e-6, w_m2
+    )  # inv_mass = posterior variance (diag metric)
+
+    # Phase 2 -----------------------------------------------------------
+    def phase2(carry, key):
+        q, ld, g, da = carry
+        eps = jnp.exp(da.log_eps)
+        q, ld, g, a_prob = hmc_step(key, q, ld, g, eps, var)
+        da = da_update(da, a_prob, target_accept)
+        return (q, ld, g, da), a_prob
+
+    keys2 = jax.random.split(keys1[0], num_steps - half)
+    da2 = da_init(initial_step_size)._replace(
+        log_eps=da.log_eps_avg, mu=jnp.log(10.0) + da.log_eps_avg
+    )
+    (q, ld, g, da), _ = jax.lax.scan(phase2, (q, ld, g, da2), keys2)
+    step_size = jnp.exp(da.log_eps_avg)
+    return q, step_size, var

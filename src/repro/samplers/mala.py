@@ -1,0 +1,70 @@
+"""Metropolis-adjusted Langevin algorithm (MALA)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.samplers.base import (
+    LogDensityFn,
+    MCMCKernel,
+    PyTree,
+    StepInfo,
+    tree_add,
+    tree_random_normal,
+    tree_scale,
+    tree_sub,
+    tree_vdot,
+    tree_where,
+)
+
+
+class MALAState(NamedTuple):
+    position: PyTree
+    log_density: jnp.ndarray
+    grad: PyTree
+
+
+def mala_kernel(logdensity: LogDensityFn, step_size: float = 0.05) -> MCMCKernel:
+    """MALA: θ' = θ + (ε²/2)∇log p(θ) + ε ξ with the exact MH correction."""
+
+    eps = step_size
+    value_and_grad = jax.value_and_grad(logdensity)
+
+    def init(position: PyTree) -> MALAState:
+        ld, g = value_and_grad(position)
+        return MALAState(position=position, log_density=ld, grad=g)
+
+    def _forward_logq(x_from: PyTree, g_from: PyTree, x_to: PyTree) -> jnp.ndarray:
+        # log q(x_to | x_from) up to a constant: −‖x_to − x_from − (ε²/2)g‖²/(2ε²)
+        mean = tree_add(x_from, tree_scale(0.5 * eps**2, g_from))
+        diff = tree_sub(x_to, mean)
+        return -tree_vdot(diff, diff) / (2.0 * eps**2)
+
+    def step(key: jax.Array, state: MALAState):
+        k_prop, k_acc = jax.random.split(key)
+        noise = tree_random_normal(k_prop, state.position)
+        proposal = tree_add(
+            tree_add(state.position, tree_scale(0.5 * eps**2, state.grad)),
+            tree_scale(eps, noise),
+        )
+        ld_prop, g_prop = value_and_grad(proposal)
+        log_ratio = (
+            ld_prop
+            - state.log_density
+            + _forward_logq(proposal, g_prop, state.position)
+            - _forward_logq(state.position, state.grad, proposal)
+        )
+        accept_prob = jnp.minimum(1.0, jnp.exp(jnp.minimum(log_ratio, 0.0)))
+        accepted = jnp.log(jax.random.uniform(k_acc)) < log_ratio
+        new_state = MALAState(
+            position=tree_where(accepted, proposal, state.position),
+            log_density=jnp.where(accepted, ld_prop, state.log_density),
+            grad=tree_where(accepted, g_prop, state.grad),
+        )
+        info = StepInfo(accept_prob, accepted, new_state.log_density)
+        return new_state, info
+
+    return MCMCKernel(init=init, step=step)

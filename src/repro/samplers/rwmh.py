@@ -1,0 +1,72 @@
+"""Random-walk Metropolis–Hastings with Gaussian proposals.
+
+The paper's §2 example sampler: on machine m the acceptance ratio uses the
+subposterior density (underweighted prior) — that is entirely contained in the
+``logdensity`` closure built by :func:`repro.core.subposterior.make_subposterior_logpdf`,
+so this kernel is identical for full-posterior and subposterior use.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.samplers.base import (
+    LogDensityFn,
+    MCMCKernel,
+    PyTree,
+    StepInfo,
+    tree_axpy,
+    tree_random_normal,
+    tree_scale,
+    tree_where,
+)
+
+
+class RWMHState(NamedTuple):
+    position: PyTree
+    log_density: jnp.ndarray
+
+
+def rwmh_kernel(
+    logdensity: LogDensityFn,
+    step_size: float | jnp.ndarray = 0.1,
+    *,
+    proposal_fn: Optional[Callable[[jax.Array, PyTree], PyTree]] = None,
+) -> MCMCKernel:
+    """Symmetric Gaussian random-walk MH.
+
+    ``step_size`` may be a scalar or a pytree matching the position (per-leaf
+    scales). ``proposal_fn(key, position) -> position`` overrides the proposal
+    entirely — used e.g. by the GMM experiment's label-permutation moves
+    (paper §8.2), which are symmetric and therefore need no ratio correction.
+    """
+
+    def init(position: PyTree) -> RWMHState:
+        return RWMHState(position=position, log_density=logdensity(position))
+
+    def step(key: jax.Array, state: RWMHState):
+        k_prop, k_acc = jax.random.split(key)
+        if proposal_fn is not None:
+            proposal = proposal_fn(k_prop, state.position)
+        else:
+            noise = tree_random_normal(k_prop, state.position)
+            proposal = tree_axpy(1.0, tree_scale(step_size, noise), state.position)
+        log_density_prop = logdensity(proposal)
+        log_ratio = log_density_prop - state.log_density
+        accept_prob = jnp.minimum(1.0, jnp.exp(jnp.minimum(log_ratio, 0.0)))
+        accepted = jnp.log(jax.random.uniform(k_acc)) < log_ratio
+        new_state = RWMHState(
+            position=tree_where(accepted, proposal, state.position),
+            log_density=jnp.where(accepted, log_density_prop, state.log_density),
+        )
+        info = StepInfo(
+            accept_prob=accept_prob,
+            is_accepted=accepted,
+            log_density=new_state.log_density,
+        )
+        return new_state, info
+
+    return MCMCKernel(init=init, step=step)

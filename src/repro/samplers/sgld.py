@@ -1,0 +1,94 @@
+"""Stochastic-gradient Langevin dynamics (Welling & Teh 2011) + pSGLD.
+
+The paper's §7 points out that minibatch samplers "can be directly used in our
+algorithm to generate subposterior samples" — this is the LM-scale sampler:
+each EP-MCMC chain group runs SGLD on its shard's subposterior
+
+    θ ← θ + (ε/2)·∇[ (1/M)·log p(θ) + (N_m/B)·log p(batch|θ) ] + √ε·ξ .
+
+Unlike the MH kernels, SGLD consumes a data batch per step, so its ``step``
+has signature ``step(key, state, batch)``; :mod:`repro.distributed.epmcmc`
+threads the per-shard data pipeline through. With RMSProp preconditioning
+(``preconditioner="rmsprop"``) this is pSGLD (Li et al. 2016).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.samplers.base import PyTree, tree_random_normal
+
+GradEstimator = Callable[[PyTree, Any], PyTree]  # (theta, batch) -> grad log subposterior
+
+
+class SGLDState(NamedTuple):
+    position: PyTree
+    v: PyTree  # RMSProp second-moment accumulator (zeros when unpreconditioned)
+    step: jnp.ndarray
+
+
+class SGLDKernel(NamedTuple):
+    init: Callable[[PyTree], SGLDState]
+    step: Callable[[jax.Array, SGLDState, Any], Tuple[SGLDState, jnp.ndarray]]
+
+
+def sgld_kernel(
+    grad_estimator: GradEstimator,
+    step_size: float | Callable[[jnp.ndarray], jnp.ndarray] = 1e-5,
+    *,
+    preconditioner: Optional[str] = None,
+    rmsprop_decay: float = 0.99,
+    rmsprop_eps: float = 1e-5,
+    temperature: float = 1.0,
+) -> SGLDKernel:
+    """SGLD/pSGLD kernel. ``step_size`` may be a schedule ``t -> ε_t``.
+
+    ``temperature=0`` degrades gracefully to preconditioned SGD — used by the
+    ``--mode sgd`` baseline so both modes share one update rule (and one HLO).
+    """
+
+    def eps_at(t: jnp.ndarray) -> jnp.ndarray:
+        if callable(step_size):
+            return step_size(t)
+        return jnp.asarray(step_size)
+
+    def init(position: PyTree) -> SGLDState:
+        return SGLDState(
+            position=position,
+            v=jax.tree.map(jnp.zeros_like, position),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def step(key: jax.Array, state: SGLDState, batch: Any):
+        eps = eps_at(state.step)
+        grad = grad_estimator(state.position, batch)
+        if preconditioner == "rmsprop":
+            v = jax.tree.map(
+                lambda vi, gi: rmsprop_decay * vi + (1.0 - rmsprop_decay) * gi * gi,
+                state.v,
+                grad,
+            )
+            g_scale = jax.tree.map(lambda vi: 1.0 / (jnp.sqrt(vi) + rmsprop_eps), v)
+        else:
+            v = state.v
+            g_scale = jax.tree.map(jnp.ones_like, grad)
+        noise = tree_random_normal(key, state.position)
+        new_position = jax.tree.map(
+            lambda q, g, s, n: q
+            + 0.5 * eps * s * g
+            + jnp.sqrt(temperature * eps * s) * n,
+            state.position,
+            grad,
+            g_scale,
+            noise,
+        )
+        new_state = SGLDState(position=new_position, v=v, step=state.step + 1)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(g**2) for g in jax.tree.leaves(grad))
+        )
+        return new_state, gnorm
+
+    return SGLDKernel(init=init, step=step)

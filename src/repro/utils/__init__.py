@@ -1,0 +1,7 @@
+"""Shared small utilities: pytree parameter flattening, RNG fan-out, stats."""
+
+from repro.utils.pytree import (  # noqa: F401
+    ravel_pytree_batched,
+    tree_size,
+    tree_bytes,
+)

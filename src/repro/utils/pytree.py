@@ -1,0 +1,66 @@
+"""Pytree helpers used across the framework.
+
+The combination algorithms (repro.core.combine) operate on flat sample arrays
+``(M, T, d)``.  Model parameters are pytrees; these helpers bridge the two.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of scalar elements in a pytree of arrays."""
+    return int(sum(np.prod(l.shape, dtype=np.int64) for l in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Total number of bytes in a pytree of arrays."""
+    return int(
+        sum(
+            np.prod(l.shape, dtype=np.int64) * jnp.dtype(l.dtype).itemsize
+            for l in jax.tree.leaves(tree)
+        )
+    )
+
+
+def ravel_pytree_batched(tree: PyTree) -> Tuple[jnp.ndarray, Callable[[jnp.ndarray], PyTree]]:
+    """Ravel a pytree whose leaves share leading batch dims ``(...B,)`` into a
+    ``(...B, d)`` matrix, returning an unravel closure.
+
+    Unlike ``jax.flatten_util.ravel_pytree`` this keeps the batch dimensions —
+    used to turn per-chain sample pytrees ``(M, T, *leaf_shape)`` into the
+    ``(M, T, d)`` layout the combiners expect.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        raise ValueError("empty pytree")
+    # The number of leading batch dims is inferred as the longest shared prefix.
+    shapes = [l.shape for l in leaves]
+    nbatch = 0
+    while all(len(s) > nbatch for s in shapes) and len({s[: nbatch + 1] for s in shapes}) == 1:
+        nbatch += 1
+    # Allow a trailing event dim of size prod(shape[nbatch:]) per leaf.
+    event_sizes = [int(np.prod(s[nbatch:], dtype=np.int64)) for s in shapes]
+    event_shapes = [s[nbatch:] for s in shapes]
+    batch_shape = shapes[0][:nbatch]
+    flat = jnp.concatenate(
+        [l.reshape(batch_shape + (es,)) for l, es in zip(leaves, event_sizes)], axis=-1
+    )
+    offsets = np.cumsum([0] + event_sizes)
+    dtypes = [l.dtype for l in leaves]
+
+    def unravel(vec: jnp.ndarray) -> PyTree:
+        parts = [
+            vec[..., offsets[i] : offsets[i + 1]].reshape(vec.shape[:-1] + event_shapes[i]).astype(dtypes[i])
+            for i in range(len(leaves))
+        ]
+        return jax.tree.unflatten(treedef, parts)
+
+    return flat, unravel

@@ -1,0 +1,88 @@
+"""Checkpoint subsystem: atomicity, retention, async, elastic reshard."""
+
+import json
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    Checkpointer,
+    latest_step,
+    restore,
+    restore_elastic_chains,
+    save,
+)
+
+
+@pytest.fixture()
+def tree():
+    return {
+        "params": {"w": jnp.arange(24.0).reshape(4, 6), "b": jnp.ones((4,))},
+        "key": jnp.zeros((4, 2), jnp.uint32),
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path, tree):
+    save(tmp_path, 5, tree, metadata={"num_chains": 4})
+    got, meta = restore(tmp_path, template=tree)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(a, b)
+        assert a.dtype == b.dtype
+    assert meta["num_chains"] == 4
+
+
+def test_commit_is_manifest_gated(tmp_path, tree):
+    save(tmp_path, 5, tree)
+    # simulate a crashed writer: data without manifest
+    broken = tmp_path / "step_000000009"
+    (broken / "host_00000").mkdir(parents=True)
+    assert latest_step(tmp_path) == 5  # uncommitted dir ignored
+
+
+def test_retention_keeps_last_k(tmp_path, tree):
+    for s in (1, 2, 3, 4):
+        save(tmp_path, s, tree, keep=2)
+    steps = sorted(p.name for p in tmp_path.iterdir())
+    assert steps == ["step_000000003", "step_000000004"]
+
+
+def test_async_checkpointer_overlaps(tmp_path, tree):
+    ck = Checkpointer(tmp_path, keep=5)
+    for s in range(3):
+        ck.save(s, jax.tree.map(lambda x: x + s, tree))
+    ck.close()
+    got, _ = restore(tmp_path, step=2, template=tree)
+    np.testing.assert_array_equal(got["params"]["b"], tree["params"]["b"] + 2)
+
+
+def test_elastic_shrink_and_grow(tmp_path, tree):
+    save(tmp_path, 1, tree, metadata={"num_chains": 4})
+    small = jax.tree.map(lambda x: x[:2] if x.ndim and x.shape[0] == 4 else x, tree)
+    got, meta = restore_elastic_chains(tmp_path, small, 2)
+    np.testing.assert_array_equal(got["params"]["w"], tree["params"]["w"][:2])
+    assert meta["num_chains"] == 2 and meta["elastic_from"] == 4
+
+    big = jax.tree.map(
+        lambda x: jnp.concatenate([x, x], 0) if x.ndim and x.shape[0] == 4 else x, tree
+    )
+    got8, _ = restore_elastic_chains(tmp_path, big, 8)
+    np.testing.assert_array_equal(got8["params"]["w"][4:], tree["params"]["w"])
+    # tiled RNG keys got bumped so streams de-duplicate
+    assert not np.array_equal(np.asarray(got8["key"][4]), np.asarray(got8["key"][0]))
+
+
+def test_restart_replays_data_stream():
+    """Fault-tolerance invariant: data is a pure function of (seed, shard,
+    step) — a restart consumes the identical stream."""
+    from repro.data.tokens import TokenStream
+
+    a = TokenStream(1000, 4, 32, seed=3, shard_index=2, num_shards=8)
+    b = TokenStream(1000, 4, 32, seed=3, shard_index=2, num_shards=8)
+    np.testing.assert_array_equal(a.batch(17)["tokens"], b.batch(17)["tokens"])
+    c = TokenStream(1000, 4, 32, seed=3, shard_index=3, num_shards=8)
+    assert not np.array_equal(np.asarray(a.batch(17)["tokens"]), np.asarray(c.batch(17)["tokens"]))

@@ -1,0 +1,146 @@
+"""Combiner correctness: closed-form linear-Gaussian oracle + invariants.
+
+The linear-Gaussian model is the one case with an exact posterior AND exact
+subposteriors, so every claim in paper §3/§5 is checkable numerically:
+- the parametric product of exact subposterior moments equals the posterior;
+- nonparametric/semiparametric IMG samples converge to the posterior;
+- ragged counts (stragglers) keep all estimators consistent.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import combine
+from repro.core.subposterior import make_subposterior_logpdf, partition_data
+from repro.models.bayes import linear_gaussian as lg
+from repro.samplers.base import run_chain
+from repro.samplers.rwmh import rwmh_kernel
+
+M, T, D, N = 8, 2500, 4, 4096
+
+
+@pytest.fixture(scope="module")
+def lg_setup():
+    key = jax.random.PRNGKey(1)
+    data, _ = lg.generate_data(key, N, D)
+    post = lg.posterior_moments(data)
+    shards = partition_data(data, M)
+
+    def one(shard_idx, k):
+        shard = jax.tree.map(lambda x: x[shard_idx], shards)
+        logpdf = make_subposterior_logpdf(lg.log_prior, lg.log_lik, shard, M)
+        kern = rwmh_kernel(logpdf, step_size=0.08)
+        pos, _ = run_chain(k, kern, jnp.zeros(D), T, burn_in=500)
+        return pos
+
+    keys = jax.random.split(jax.random.fold_in(key, 7), M)
+    samples = jax.jit(jax.vmap(one))(jnp.arange(M), keys)
+    return samples, post
+
+
+def test_subposterior_product_of_exact_moments_is_posterior():
+    """Eq 2.1 sanity: ∏ subposteriors == posterior, in closed form."""
+    key = jax.random.PRNGKey(0)
+    data, _ = lg.generate_data(key, N, D)
+    post = lg.posterior_moments(data)
+    subs = [lg.subposterior_moments(jax.tree.map(lambda x, m=m: x[m], partition_data(data, M)), M) for m in range(M)]
+    from repro.core.gaussian import product_moments
+
+    prod = product_moments(
+        jnp.stack([s.mean for s in subs]), jnp.stack([s.cov for s in subs])
+    )
+    np.testing.assert_allclose(prod.mean, post.mean, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(prod.cov, post.cov, rtol=1e-3, atol=1e-6)
+
+
+def test_parametric_combiner_recovers_posterior(lg_setup):
+    samples, post = lg_setup
+    res = jax.jit(lambda k: combine.parametric(k, samples, 4000))(jax.random.PRNGKey(2))
+    err = jnp.linalg.norm(res.samples.mean(0) - post.mean)
+    assert float(err) < 0.05, float(err)
+    np.testing.assert_allclose(res.moments.mean, post.mean, atol=0.05)
+    np.testing.assert_allclose(res.moments.cov, post.cov, rtol=0.5, atol=2e-4)
+
+
+@pytest.mark.parametrize("method,kwargs", [
+    ("nonparametric_img", {}),
+    ("semiparametric_img", {}),
+    ("semiparametric_img", {"nonparametric_weights": True}),
+])
+def test_exact_combiners_recover_posterior(lg_setup, method, kwargs):
+    samples, post = lg_setup
+    fn = getattr(combine, method)
+    res = jax.jit(lambda k: fn(k, samples, 3000, rescale=True, **kwargs))(
+        jax.random.PRNGKey(3)
+    )
+    err = jnp.linalg.norm(res.samples.mean(0) - post.mean)
+    assert float(err) < 0.12, (method, float(err))
+    assert 0.005 < float(res.acceptance_rate) <= 1.0
+
+
+def test_ragged_counts_consistency(lg_setup):
+    """Straggler chains (paper footnote 1): dropping trailing samples of some
+    chains must not break any combiner, and parametric stays near-exact."""
+    samples, post = lg_setup
+    counts = jnp.array([T, T // 2, T, T // 3, T, T, T // 4, T])
+    res = jax.jit(lambda k: combine.parametric(k, samples, 2000, counts=counts))(
+        jax.random.PRNGKey(4)
+    )
+    assert float(jnp.linalg.norm(res.samples.mean(0) - post.mean)) < 0.08
+    res_np = jax.jit(
+        lambda k: combine.nonparametric_img(k, samples, 500, counts=counts, rescale=True)
+    )(jax.random.PRNGKey(5))
+    assert bool(jnp.all(jnp.isfinite(res_np.samples)))
+
+
+def test_incremental_weight_equals_bruteforce():
+    """The O(d) incremental IMG weight must equal Eq 3.5 exactly."""
+    key = jax.random.PRNGKey(6)
+    theta = jax.random.normal(key, (5, 3))  # (M, d) one selection
+    h = jnp.asarray(0.5)
+    lw = combine.log_weight_bruteforce(theta, h)
+    mean = theta.mean(0)
+    sumsq = jnp.sum(theta**2)
+    sse = sumsq - 5 * jnp.sum(mean**2)
+    lw_inc = -0.5 * sse / h**2 - 5 * (3 / 2.0) * jnp.log(2 * jnp.pi * h**2)
+    np.testing.assert_allclose(lw, lw_inc, rtol=1e-5)
+
+
+def test_baselines_shapes_and_bias(lg_setup):
+    """subpostAvg/pool run. In the linear-Gaussian case the pooled *mean* is
+    unbiased (symmetry) — the paper-Fig-1/2 pathology is in the SPREAD:
+    pooling keeps the √M-wider subposterior scatter, averaging shrinks it by
+    a further √M; the parametric product matches the true posterior scale."""
+    samples, post = lg_setup
+    avg = combine.subpost_average(samples)
+    pool = combine.pool(samples)
+    cons = combine.consensus_weighted(samples)
+    assert avg.shape == (T, D) and pool.shape == (M * T, D) and cons.shape == (T, D)
+    res = combine.parametric(jax.random.PRNGKey(9), samples, T)
+    true_scale = float(jnp.sqrt(jnp.trace(post.cov)))
+    scale_param = float(jnp.sqrt(jnp.sum(res.samples.std(0) ** 2)))
+    scale_pool = float(jnp.sqrt(jnp.sum(pool.std(0) ** 2)))
+    assert abs(scale_param - true_scale) < 0.3 * true_scale
+    assert scale_pool > 2.0 * true_scale  # pooled spread keeps the √M inflation
+
+
+def test_online_moments_match_batch(lg_setup):
+    samples, _ = lg_setup
+    sub = samples[:, :100]  # (M, 100, D)
+    state = combine.online_init(M, D)
+
+    def fold(state, t):
+        for m in range(M):
+            state = combine.online_update(state, m, sub[m, t])
+        return state
+
+    for t in range(100):
+        state = fold(state, t)
+    online = combine.online_product(state)
+    batch = combine.parametric(jax.random.PRNGKey(0), sub, 10)
+    np.testing.assert_allclose(online.mean, batch.moments.mean, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(online.cov, batch.moments.cov, rtol=1e-2, atol=1e-5)

@@ -1,0 +1,71 @@
+"""Hypothesis properties of the combiners themselves (machine symmetry,
+affine equivariance, ragged-count degeneracies)."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+
+from repro.core import combine
+
+
+def _samples(seed, m, t, d, spread=1.0):
+    key = jax.random.PRNGKey(seed)
+    centers = spread * jax.random.normal(key, (m, 1, d))
+    return centers + 0.5 * jax.random.normal(jax.random.fold_in(key, 1), (m, t, d))
+
+
+@given(st.integers(2, 6), st.integers(0, 500))
+def test_parametric_machine_permutation_invariance(m, seed):
+    s = _samples(seed, m, 200, 3)
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), m)
+    a = combine.parametric(jax.random.PRNGKey(0), s, 10)
+    b = combine.parametric(jax.random.PRNGKey(0), s[perm], 10)
+    np.testing.assert_allclose(a.moments.mean, b.moments.mean, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(a.moments.cov, b.moments.cov, rtol=1e-3, atol=1e-5)
+
+
+@given(st.integers(0, 300))
+def test_parametric_translation_equivariance(seed):
+    """Shifting every machine's samples by c shifts the product mean by c."""
+    s = _samples(seed, 4, 150, 2)
+    c = jnp.asarray([2.5, -1.0])
+    a = combine.parametric(jax.random.PRNGKey(0), s, 10)
+    b = combine.parametric(jax.random.PRNGKey(0), s + c, 10)
+    np.testing.assert_allclose(b.moments.mean, a.moments.mean + c, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(b.moments.cov, a.moments.cov, rtol=1e-4, atol=1e-6)
+
+
+@given(st.integers(0, 300))
+def test_single_machine_combination_is_identityish(seed):
+    """M=1: the product of one subposterior is that subposterior — the
+    parametric combiner must return its moments unchanged."""
+    s = _samples(seed, 1, 400, 3)
+    res = combine.parametric(jax.random.PRNGKey(0), s, 50)
+    np.testing.assert_allclose(res.moments.mean, s[0].mean(0), rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(0, 200))
+def test_img_weight_shift_invariance(seed):
+    """w_t depends only on spread around θ̄ — shifting all selected samples
+    leaves the weight unchanged (Eq 3.5)."""
+    key = jax.random.PRNGKey(seed)
+    theta = jax.random.normal(key, (6, 4))
+    h = jnp.asarray(0.7)
+    a = combine.log_weight_bruteforce(theta, h)
+    b = combine.log_weight_bruteforce(theta + 3.3, h)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-4)
+
+
+@given(st.integers(2, 5), st.integers(0, 200))
+def test_counts_full_equals_none(m, seed):
+    """counts=T must be exactly equivalent to counts=None everywhere."""
+    s = _samples(seed, m, 64, 2)
+    counts = jnp.full((m,), 64, jnp.int32)
+    a = combine.subpost_average(s)
+    b = combine.subpost_average(s, counts=counts)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    pa = combine.parametric(jax.random.PRNGKey(1), s, 16)
+    pb = combine.parametric(jax.random.PRNGKey(1), s, 16, counts=counts)
+    np.testing.assert_allclose(pa.samples, pb.samples, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,54 @@
+"""Pallas flash-attention kernel (interpret mode) vs oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+
+
+@pytest.mark.parametrize(
+    "b,s,t,kh,g,hd,hdv,causal",
+    [
+        (1, 128, 128, 1, 1, 32, 32, True),
+        (2, 128, 128, 2, 2, 32, 16, True),  # GQA + MLA-style hd_v != hd
+        (1, 100, 160, 1, 4, 16, 16, False),  # ragged + cross lengths
+        (1, 256, 256, 2, 1, 64, 64, True),
+    ],
+)
+def test_pallas_flash_matches_ref(b, s, t, kh, g, hd, hdv, causal):
+    key = jax.random.PRNGKey(s + t)
+    q = jax.random.normal(key, (b, s, kh, g, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, t, kh, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, t, kh, hdv))
+    got = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    want = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_flash_matches_model_flash():
+    """Kernel vs the jnp flash used by the models (two independent paths)."""
+    from repro.models.lm.flash import flash_attention as jnp_flash
+
+    key = jax.random.PRNGKey(0)
+    b, s, kh, g, hd = 1, 128, 2, 2, 32
+    q = jax.random.normal(key, (b, s, kh, g, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kh, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kh, hd))
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    want = jnp_flash(q, k, v, True, 64, 64)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_pallas_flash_bf16_inputs():
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (1, 128, 1, 2, 32), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 128, 1, 32), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 128, 1, 32), jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    want = flash_attention_ref(q, k, v, causal=True)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=3e-2, atol=3e-2
+    )

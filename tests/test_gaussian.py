@@ -1,0 +1,114 @@
+"""Hypothesis property tests on the Gaussian-product algebra (paper Eqs 3.1/3.2)."""
+
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+
+from repro.core.gaussian import (
+    fit_moments,
+    log_isotropic_normal_pdf,
+    log_normal_pdf,
+    product_moments,
+    product_moments_diag,
+    sample_gaussian,
+)
+
+
+def _spd(key, d, scale=1.0):
+    a = jax.random.normal(key, (d, d))
+    return scale * (a @ a.T / d + jnp.eye(d))
+
+
+@given(st.integers(1, 5), st.integers(1, 6), st.integers(0, 10_000))
+def test_product_moments_matches_bruteforce(m, d, seed):
+    key = jax.random.PRNGKey(seed)
+    means = jax.random.normal(key, (m, d))
+    covs = jnp.stack([_spd(jax.random.fold_in(key, i), d) for i in range(m)])
+    got = product_moments(means, covs)
+    precs = np.stack([np.linalg.inv(np.asarray(c)) for c in covs])
+    lam = precs.sum(0)
+    cov = np.linalg.inv(lam)
+    mean = cov @ np.einsum("mij,mj->i", precs, np.asarray(means))
+    np.testing.assert_allclose(got.cov, cov, rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(got.mean, mean, rtol=2e-3, atol=2e-4)
+
+
+@given(st.integers(1, 6), st.integers(1, 50), st.integers(0, 10_000))
+def test_product_diag_matches_full_on_diagonal_inputs(m, d, seed):
+    key = jax.random.PRNGKey(seed)
+    means = jax.random.normal(key, (m, d))
+    variances = jax.random.uniform(jax.random.fold_in(key, 1), (m, d), minval=0.1, maxval=3.0)
+    diag = product_moments_diag(means, variances)
+    full = product_moments(means, jax.vmap(jnp.diag)(variances))
+    np.testing.assert_allclose(diag.mean, full.mean, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(jnp.diag(full.cov), diag.cov, rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(1, 4), st.integers(0, 1000))
+def test_product_with_single_factor_is_identity(d, seed):
+    key = jax.random.PRNGKey(seed)
+    mean = jax.random.normal(key, (1, d))
+    cov = _spd(jax.random.fold_in(key, 1), d)[None]
+    got = product_moments(mean, cov)
+    np.testing.assert_allclose(got.mean, mean[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got.cov, cov[0], rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(2, 5), st.integers(0, 1000))
+def test_product_commutative(m, seed):
+    key = jax.random.PRNGKey(seed)
+    d = 3
+    means = jax.random.normal(key, (m, d))
+    covs = jnp.stack([_spd(jax.random.fold_in(key, i), d) for i in range(m)])
+    perm = jax.random.permutation(jax.random.fold_in(key, 99), m)
+    a = product_moments(means, covs)
+    b = product_moments(means[perm], covs[perm])
+    np.testing.assert_allclose(a.mean, b.mean, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(a.cov, b.cov, rtol=1e-4, atol=1e-5)
+
+
+def test_log_normal_pdf_matches_scipy_formula():
+    key = jax.random.PRNGKey(0)
+    d = 4
+    x = jax.random.normal(key, (7, d))
+    mean = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    cov = _spd(jax.random.fold_in(key, 2), d)
+    got = log_normal_pdf(x, mean, cov)
+    diff = np.asarray(x - mean)
+    c = np.asarray(cov)
+    want = (
+        -0.5 * np.einsum("bi,ij,bj->b", diff, np.linalg.inv(c), diff)
+        - 0.5 * np.linalg.slogdet(c)[1]
+        - 0.5 * d * np.log(2 * np.pi)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    # isotropic special case agrees
+    got_iso = log_isotropic_normal_pdf(x, mean, 0.7)
+    want_iso = log_normal_pdf(x, mean, 0.7 * jnp.eye(d))
+    np.testing.assert_allclose(got_iso, want_iso, rtol=1e-5, atol=1e-5)
+
+
+def test_fit_moments_masked_equals_fit_on_subset():
+    key = jax.random.PRNGKey(1)
+    s = jax.random.normal(key, (50, 3)) * 2.0 + 1.0
+    mask = jnp.array([1.0] * 30 + [0.0] * 20)
+    a = fit_moments(s, mask)
+    b = fit_moments(s[:30])
+    np.testing.assert_allclose(a.mean, b.mean, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(a.cov, b.cov, rtol=1e-4, atol=1e-5)
+
+
+def test_sample_gaussian_moments_converge():
+    key = jax.random.PRNGKey(2)
+    d = 3
+    mean = jnp.array([1.0, -2.0, 0.5])
+    cov = _spd(key, d)
+    from repro.core.gaussian import GaussianMoments
+
+    draws = sample_gaussian(jax.random.fold_in(key, 1), GaussianMoments(mean, cov), 200_000)
+    np.testing.assert_allclose(draws.mean(0), mean, atol=2e-2)
+    emp = np.cov(np.asarray(draws).T)
+    np.testing.assert_allclose(emp, cov, atol=5e-2)

@@ -1,0 +1,90 @@
+"""L2 metric, bandwidth schedules, tree combiner, ESS — properties."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+
+from repro.core import bandwidth as bw
+from repro.core import combine, metrics
+from repro.core.tree_combine import tree_combine
+
+
+def test_l2_distance_zero_for_identical_samples():
+    s = jax.random.normal(jax.random.PRNGKey(0), (500, 3))
+    d = metrics.l2_distance(s, s)
+    assert float(d) < 1e-4
+
+
+def test_l2_distance_orders_by_mean_shift():
+    key = jax.random.PRNGKey(1)
+    p = jax.random.normal(key, (800, 2))
+    near = jax.random.normal(jax.random.fold_in(key, 1), (800, 2)) + 0.3
+    far = jax.random.normal(jax.random.fold_in(key, 2), (800, 2)) + 3.0
+    assert float(metrics.l2_distance(p, near)) < float(metrics.l2_distance(p, far))
+
+
+def test_l2_distance_symmetric():
+    key = jax.random.PRNGKey(2)
+    a = jax.random.normal(key, (400, 2))
+    b = 0.5 + jax.random.normal(jax.random.fold_in(key, 1), (300, 2))
+    np.testing.assert_allclose(
+        metrics.l2_distance(a, b), metrics.l2_distance(b, a), rtol=1e-4
+    )
+
+
+@given(st.integers(1, 40), st.integers(1, 2000))
+def test_annealed_bandwidth_monotone_decreasing(d, i):
+    sched = bw.annealed(d)
+    assert float(sched(i + 1)) < float(sched(i)) <= 1.0
+
+
+def test_silverman_scales_with_std():
+    key = jax.random.PRNGKey(0)
+    s = jax.random.normal(key, (500, 4))
+    np.testing.assert_allclose(bw.silverman(3.0 * s), 3.0 * bw.silverman(s), rtol=1e-4)
+
+
+def test_ess_detects_correlation():
+    key = jax.random.PRNGKey(3)
+    iid = jax.random.normal(key, (4000,))
+    rho = 0.95
+    noise = jax.random.normal(jax.random.fold_in(key, 1), (4000,))
+
+    def ar1(carry, eps):
+        x = rho * carry + jnp.sqrt(1 - rho**2) * eps
+        return x, x
+
+    _, correlated = jax.lax.scan(ar1, 0.0, noise)
+    ess_iid = float(metrics.effective_sample_size(iid))
+    ess_corr = float(metrics.effective_sample_size(correlated))
+    assert ess_corr < 0.3 * ess_iid
+    assert ess_iid > 2000
+
+
+def test_pairwise_tree_combiner_matches_flat_on_gaussians():
+    """The O(dTM) tree (paper §3.2 end) must agree with the flat parametric
+    combiner in the Gaussian regime."""
+    key = jax.random.PRNGKey(4)
+    M, T, d = 8, 3000, 3
+    means = jax.random.normal(key, (M, d))
+    samples = means[:, None, :] + 0.7 * jax.random.normal(
+        jax.random.fold_in(key, 1), (M, T, d)
+    )
+    flat = combine.parametric(jax.random.PRNGKey(5), samples, T)
+    tree = tree_combine(jax.random.PRNGKey(6), samples, T, method="parametric")
+    np.testing.assert_allclose(
+        tree.samples.mean(0), flat.samples.mean(0), atol=0.12
+    )
+
+
+def test_mmd_zero_for_same_distribution():
+    key = jax.random.PRNGKey(7)
+    a = jax.random.normal(key, (600, 2))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (600, 2))
+    c = 2.0 + jax.random.normal(jax.random.fold_in(key, 2), (600, 2))
+    same = float(metrics.mmd2_rbf(a, b, 1.0))
+    diff = float(metrics.mmd2_rbf(a, c, 1.0))
+    assert same < 0.01 and diff > 10 * max(same, 1e-6)

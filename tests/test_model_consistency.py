@@ -1,0 +1,59 @@
+"""Decode-vs-forward consistency: teacher-forcing the same tokens through
+(prefill + decode_step×k) must reproduce forward()'s logits — this is the
+invariant that makes the decode_* dry-run cells meaningful."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.lm import model as mdl
+from repro.models.lm.config import reduced
+
+B, S_PROMPT, S_GEN = 2, 12, 4
+
+CONSISTENCY_ARCHS = [a for a in ARCH_IDS if a not in ("llava_next_mistral_7b",)]
+
+
+@pytest.mark.parametrize("arch", CONSISTENCY_ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = mdl.init_params(key, cfg)
+    tokens = jax.random.randint(jax.random.fold_in(key, 1), (B, S_PROMPT + S_GEN), 0, cfg.vocab_size)
+    enc = (
+        0.1 * jnp.ones((B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        if cfg.num_encoder_layers
+        else None
+    )
+
+    full_logits, _ = mdl.forward(params, cfg, tokens, enc_frames=enc)
+
+    _, caches, memory = mdl.prefill(
+        params, cfg, tokens[:, :S_PROMPT], max_len=S_PROMPT + S_GEN, enc_frames=enc
+    )
+    got = []
+    for t in range(S_GEN):
+        logits, caches = mdl.decode_step(
+            params, cfg, tokens[:, S_PROMPT + t : S_PROMPT + t + 1],
+            caches, jnp.asarray(S_PROMPT + t, jnp.int32), memory=memory,
+        )
+        got.append(logits[:, 0])
+    got = jnp.stack(got, axis=1).astype(jnp.float32)
+    want = full_logits[:, S_PROMPT : S_PROMPT + S_GEN].astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_prefill_last_logits_match_forward():
+    cfg = reduced(get_config("llama3_2_3b"))
+    key = jax.random.PRNGKey(3)
+    params = mdl.init_params(key, cfg)
+    tokens = jax.random.randint(jax.random.fold_in(key, 1), (B, S_PROMPT), 0, cfg.vocab_size)
+    logits_fwd, _ = mdl.forward(params, cfg, tokens)
+    logits_pre, _, _ = mdl.prefill(params, cfg, tokens, max_len=S_PROMPT + 2)
+    np.testing.assert_allclose(
+        logits_pre[:, 0].astype(jnp.float32),
+        logits_fwd[:, -1].astype(jnp.float32),
+        rtol=2e-3, atol=2e-3,
+    )

@@ -1,0 +1,81 @@
+"""MoE layer invariants: dispatch-vs-gather consistency, capacity math,
+router normalization, shared experts."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.lm import moe as moe_lib
+from repro.models.lm.config import reduced
+
+
+def _cfg(**over):
+    cfg = reduced(get_config("granite_moe_1b"))
+    if over:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, **over))
+    return cfg
+
+
+def test_dispatch_matches_gather_when_dropless():
+    """§Perf iteration 1 safety gate: the capacity-dispatch decode path must
+    agree with the dropless per-token gather path whenever capacity suffices
+    (reduced configs use capacity_factor=4 ⇒ effectively dropless)."""
+    cfg = _cfg()
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model), jnp.float32)
+    y_dispatch, _aux = moe_lib.moe_forward(p, cfg, x)
+    y_gather, _ = moe_lib.moe_forward_gather(p, cfg, x)
+    np.testing.assert_allclose(y_dispatch, y_gather, rtol=2e-3, atol=2e-3)
+
+
+def test_dispatch_drops_only_over_capacity():
+    """With capacity_factor → tiny, outputs shrink toward the shared-expert
+    path but never NaN; combine weights of dropped tokens are zero."""
+    cfg = _cfg(capacity_factor=0.01)
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model), jnp.float32)
+    y, aux = moe_lib.moe_forward(p, cfg, x)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert bool(jnp.isfinite(aux))
+
+
+def test_router_topk_normalization():
+    cfg = _cfg()
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 4, cfg.d_model), jnp.float32)
+    tokens = x.reshape(-1, cfg.d_model)
+    logits = (tokens @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, _ = jax.lax.top_k(probs, cfg.moe.top_k)
+    normed = vals / vals.sum(-1, keepdims=True)
+    np.testing.assert_allclose(normed.sum(-1), 1.0, rtol=1e-6)
+
+
+def test_aux_loss_uniform_router_is_one():
+    """Switch aux loss equals ~1.0 for a perfectly uniform router."""
+    cfg = _cfg()
+    e = cfg.moe.num_experts
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    p = dict(p, router=jnp.zeros_like(p["router"]))  # uniform probs
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 32, cfg.d_model), jnp.float32)
+    _, aux = moe_lib.moe_forward(p, cfg, x)
+    # me = 1/E exactly; ce ≈ top-1 histogram (ties broken by index) — aux =
+    # E·Σ me·ce = Σ ce = 1 exactly regardless of tie-breaking
+    np.testing.assert_allclose(float(aux), 1.0, rtol=1e-5)
+
+
+def test_shared_experts_always_on():
+    cfg = reduced(get_config("deepseek_v2_236b"))
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    assert "shared" in p
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 4, cfg.d_model), jnp.float32)
+    y_full, _ = moe_lib.moe_forward(p, cfg, x)
+    p_no_routed = jax.tree.map(jnp.zeros_like, p)
+    p_no_routed = dict(p, experts=jax.tree.map(jnp.zeros_like, p["experts"]))
+    y_shared_only, _ = moe_lib.moe_forward(p_no_routed, cfg, x)
+    # shared path contributes even when routed experts output zero
+    assert float(jnp.max(jnp.abs(y_shared_only))) > 0

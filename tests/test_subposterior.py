@@ -1,0 +1,83 @@
+"""Eq 2.1 identities + partitioner properties (hypothesis)."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+
+from repro.core.subposterior import (
+    make_minibatch_logpdf,
+    make_subposterior_logpdf,
+    partition_data,
+)
+
+
+@given(st.integers(1, 8), st.integers(0, 1000))
+def test_partition_is_a_partition(m, seed):
+    n = m * 12
+    key = jax.random.PRNGKey(seed)
+    data = {"x": jax.random.normal(key, (n, 3)), "y": jnp.arange(n)}
+    shards = partition_data(data, m)
+    assert shards["x"].shape == (m, n // m, 3)
+    # disjoint + exhaustive: concatenating shards reproduces the data
+    np.testing.assert_array_equal(shards["y"].reshape(-1), data["y"])
+
+
+def test_partition_rejects_nondivisible():
+    with pytest.raises(ValueError):
+        partition_data({"x": jnp.zeros((10, 2))}, 3)
+
+
+@given(st.integers(1, 10), st.integers(0, 500))
+def test_subposteriors_sum_to_posterior_logpdf(m, seed):
+    """Σ_m log p_m(θ) == log p(θ) + log p(x|θ) (both up to the same constant):
+    the defining identity p₁···p_M ∝ p(θ|x^N) of Eq 2.1."""
+    key = jax.random.PRNGKey(seed)
+    n = m * 6
+    data = jax.random.normal(key, (n, 2))
+    theta = jax.random.normal(jax.random.fold_in(key, 1), (2,))
+
+    log_prior = lambda th: -0.5 * jnp.sum(th**2)
+    log_lik = lambda th, x: -0.5 * jnp.sum((x - th) ** 2)
+
+    shards = partition_data(data, m)
+    total = sum(
+        make_subposterior_logpdf(
+            log_prior, log_lik, shards[i], m
+        )(theta)
+        for i in range(m)
+    )
+    full = make_subposterior_logpdf(log_prior, log_lik, data, 1)(theta)
+    np.testing.assert_allclose(total, full, rtol=1e-5, atol=1e-4)
+
+
+def test_minibatch_logpdf_is_unbiased():
+    """E over minibatches of the stochastic estimator == full-shard value."""
+    key = jax.random.PRNGKey(0)
+    n, b = 60, 10
+    data = jax.random.normal(key, (n, 2))
+    theta = jnp.array([0.3, -0.7])
+    log_prior = lambda th: -0.5 * jnp.sum(th**2)
+    log_lik = lambda th, x: -0.5 * jnp.sum((x - th) ** 2)
+    est = make_minibatch_logpdf(log_prior, log_lik, num_shards=4, shard_size=n)
+    full = (1.0 / 4.0) * log_prior(theta) + log_lik(theta, data)
+    # average over all disjoint minibatches
+    vals = [est(theta, data[i * b : (i + 1) * b]) for i in range(n // b)]
+    np.testing.assert_allclose(np.mean(vals), full, rtol=1e-5)
+
+
+def test_mh_ratio_uses_underweighted_prior():
+    from repro.core.subposterior import mh_correction_ratio
+
+    key = jax.random.PRNGKey(1)
+    data = jax.random.normal(key, (8, 2))
+    log_prior = lambda th: -0.5 * jnp.sum(th**2)
+    log_lik = lambda th, x: -0.5 * jnp.sum((x - th) ** 2)
+    ratio = mh_correction_ratio(log_prior, log_lik, data, num_shards=4)
+    t1, t0 = jnp.array([1.0, 0.0]), jnp.array([0.0, 0.0])
+    want = (0.25 * log_prior(t1) + log_lik(t1, data)) - (
+        0.25 * log_prior(t0) + log_lik(t0, data)
+    )
+    np.testing.assert_allclose(ratio(t1, t0), want, rtol=1e-6)
