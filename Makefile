@@ -1,0 +1,16 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench bench-json dev-deps
+
+test:  ## tier-1 verify
+	$(PYTHON) -m pytest -x -q
+
+bench:  ## CPU-sized benchmark suite (CSV to stdout)
+	$(PYTHON) -m benchmarks.run
+
+bench-json:  ## benchmark suite + BENCH_<timestamp>.json in perf/
+	$(PYTHON) -m benchmarks.run --json perf/
+
+dev-deps:  ## optional test deps (pytest, hypothesis)
+	$(PYTHON) -m pip install -r requirements-dev.txt

@@ -1,0 +1,59 @@
+"""Combiner engine throughput: sequential vs batched IMG chains.
+
+The combine stage is the paper's core contribution but, run as written
+(Algorithm 1), it is a strictly serial chain — one sweep of M index proposals
+per emitted draw. The engine's ``n_batch`` mode runs B independent IMG chains
+under ``vmap`` (each doing n_draws/B sweeps), so the same total draw count
+costs ~1/B the sequential scan length. This bench measures that directly on
+one workload, plus the Pallas-kernel vectorized-sweep variant.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from benchmarks.common import Row, block, timed
+from repro.core.combiners import get_combiner
+
+M, T, D = 8, 500, 10
+N_DRAWS = 1024
+
+
+def run(full: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    key = jax.random.PRNGKey(0)
+    n_draws = 4096 if full else N_DRAWS
+    samples = 0.3 * jax.random.normal(key, (M, T, D)) + jax.random.normal(
+        jax.random.fold_in(key, 1), (M, 1, D)
+    )
+    combiner = get_combiner("nonparametric")
+
+    t_seq = None
+    for n_batch in (1, 4, 16, 64):
+        fn = jax.jit(
+            lambda k, s, nb=n_batch: combiner(
+                k, s, n_draws, rescale=True, n_batch=nb
+            ).samples
+        )
+        t = timed(lambda: block(fn(jax.random.PRNGKey(2), samples)), warmup=1, iters=3)
+        case = "sequential" if n_batch == 1 else f"batched_B={n_batch}"
+        rows.append(Row("combine", case, "img_wall_time", t, "s",
+                        f"n_draws={n_draws} M={M} T={T} d={D}"))
+        if n_batch == 1:
+            t_seq = t
+        else:
+            rows.append(Row("combine", case, "speedup_vs_sequential", t_seq / t, "x"))
+
+    # Pallas-kernel vectorized sweep (interpret mode on CPU — correctness/
+    # shape regression guard; TPU latencies are what the kernel is for).
+    fn_k = jax.jit(
+        lambda k, s: combiner(
+            k, s, n_draws, rescale=True, n_batch=16, weight_eval="kernel"
+        ).samples
+    )
+    t_k = timed(lambda: block(fn_k(jax.random.PRNGKey(2), samples)), warmup=1, iters=3)
+    rows.append(Row("combine", "kernel_B=16", "img_wall_time", t_k, "s",
+                    "vectorized all-M-proposals sweep via Pallas img_weights"))
+    return rows

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, block, timed
-from repro.core import combine
+from repro.core.combiners import get_combiner
 from repro.kernels.img_weights import img_log_weights, img_log_weights_ref
 from repro.kernels.kde_density import kde_log_density, kde_log_density_ref
 from repro.kernels.logreg_loglik import logreg_loglik_grad, logreg_loglik_grad_ref
@@ -52,9 +52,10 @@ def run(full: bool = False) -> List[Row]:
     # ---- §4 complexity: combine cost vs M (incremental = O(dTM)) ----------
     T, d = 400, 10
     times = {}
+    nonparametric = get_combiner("nonparametric")
     for M in (4, 8, 16):
         samples = jax.random.normal(jax.random.fold_in(key, M), (M, T, d))
-        fn = jax.jit(lambda k, s: combine.nonparametric_img(k, s, T, rescale=True).samples)
+        fn = jax.jit(lambda k, s: nonparametric(k, s, T, rescale=True).samples)
         t = timed(lambda: block(fn(jax.random.PRNGKey(0), samples)), warmup=1, iters=3)
         times[M] = t
         rows.append(Row("complexity", f"M={M}", "img_combine_time", t, "s", f"T={T} d={d}"))

@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, block
-from repro.core import combine, metrics
+from repro.core import metrics
+from repro.core.combiners import canonical_combiners, get_combiner, parametric, subpost_average
 from repro.core.subposterior import make_subposterior_logpdf, partition_data
 from repro.models.bayes import logistic_regression as logreg
 from repro.samplers.base import run_chain
@@ -68,8 +69,8 @@ def run(full: bool = False) -> List[Row]:
         t0 = time.perf_counter()
         sub, acc = _run_subposterior_chains(jax.random.fold_in(key, M), data, M, T, burn, beta_true)
         t_sample = time.perf_counter() - t0
-        para = combine.parametric(jax.random.PRNGKey(1), sub, T)
-        avg = combine.subpost_average(sub)
+        para = parametric(jax.random.PRNGKey(1), sub, T)
+        avg = subpost_average(sub)
         err_product = float(jnp.linalg.norm(para.samples.mean(0) - gt.mean(0)))
         err_avg = float(jnp.linalg.norm(avg.mean(0) - gt.mean(0)))
         rows += [
@@ -81,20 +82,15 @@ def run(full: bool = False) -> List[Row]:
         if M == 10:
             sub10, para10, avg_err10 = sub, para, err_avg
 
-    # ---- Fig 2 left: error vs time for all strategies ----------------------
+    # ---- Fig 2 left: error vs time for every registered combiner -----------
     M = 10
     sub = sub10
-    strategies = {
-        "parametric": lambda k: combine.parametric(k, sub, T).samples,
-        "nonparametric": lambda k: combine.nonparametric_img(k, sub, T, rescale=True).samples,
-        "semiparametric": lambda k: combine.semiparametric_img(k, sub, T, rescale=True).samples,
-        "subpostAvg": lambda k: combine.subpost_average(sub),
-        "subpostPool": lambda k: combine.pool(sub),
-        "consensus": lambda k: combine.consensus_weighted(sub),
-    }
-    for name, fn in strategies.items():
+    for name in canonical_combiners():
+        fn = get_combiner(name)
         t0 = time.perf_counter()
-        samples = block(jax.jit(fn)(jax.random.PRNGKey(2)))
+        samples = block(
+            jax.jit(lambda k, f=fn: f(k, sub, T, rescale=True).samples)(jax.random.PRNGKey(2))
+        )
         t_comb = time.perf_counter() - t0
         err = float(metrics.log_l2_distance(gt, samples))
         rows.append(Row("fig2_logreg", name, "log_posterior_l2", err, "log_d2", f"combine_s={t_comb:.2f}"))

@@ -1,7 +1,9 @@
 """The paper's primary contribution: subposterior sampling + combination.
 
 - :mod:`repro.core.subposterior` -- Eq. 2.1 subposterior construction
-- :mod:`repro.core.combine`      -- S3 parametric / nonparametric / semiparametric
+- :mod:`repro.core.combiners`    -- S3 combiner engine (registry: parametric /
+                                    nonparametric / semiparametric / baselines)
+- :mod:`repro.core.combine`      -- backwards-compat shim over ``combiners``
 - :mod:`repro.core.tree_combine` -- S3.2/S4 O(dTM) pairwise recursion
 - :mod:`repro.core.gaussian`     -- Eqs. 3.1/3.2 Gaussian-product algebra
 - :mod:`repro.core.bandwidth`    -- h schedules (Alg. 1 line 3, Silverman)
@@ -10,6 +12,7 @@
 
 from repro.core import bandwidth as bandwidth  # noqa: F401
 from repro.core import combine as combine  # noqa: F401
+from repro.core import combiners as combiners  # noqa: F401
 from repro.core import gaussian as gaussian  # noqa: F401
 from repro.core import metrics as metrics  # noqa: F401
 from repro.core import subposterior as subposterior  # noqa: F401

@@ -1,212 +1,34 @@
-"""Subposterior sample combination — paper §3 (the core contribution).
+"""Backwards-compatibility shim over :mod:`repro.core.combiners`.
 
-Implemented procedures
-----------------------
-- :func:`parametric`          §3.1  Gaussian (BvM) product — approximate, fast
-- :func:`nonparametric_img`   §3.2  Algorithm 1 — asymptotically exact
-- :func:`semiparametric_img`  §3.3  Hjort–Glad product — asymptotically exact,
-                               with both weight variants (W_t and w_t)
-- :func:`subpost_average`     §8    "subpostAvg" baseline (uniform average)
-- :func:`consensus_weighted`  §7    Consensus Monte Carlo (Scott et al.) baseline
-- :func:`pool`                §8    "subpostPool" baseline (sample union)
-
-Layout: subposterior samples are a dense array ``(M, T, d)``. Ragged sample
-counts (straggler chains — paper footnote 1) are supported via ``counts (M,)``:
-chain m's valid samples are rows ``[0, counts[m])``.
-
-Complexity note (beyond-paper, algebraically exact): Algorithm 1 as written
-recomputes ``w_t`` from scratch per proposal — O(dTM²) total. We maintain the
-running component mean θ̄_t and Σ_m‖θ^m_{t_m}‖² incrementally, using
-
-    Σ_m ‖θ_m − θ̄‖²  =  Σ_m ‖θ_m‖²  −  M·‖θ̄‖²,
-
-so each single-index proposal is O(d) and the whole run is O(dTM) — the same
-asymptotic cost the paper only achieves with the pairwise-tree variant, but
-with *zero* change to the sampled distribution. The pairwise tree
-(:mod:`repro.core.tree_combine`) is still provided (it additionally improves
-IMG acceptance); brute-force weight evaluation lives in
-:func:`log_weight_bruteforce` as the test oracle and is what the Pallas kernel
-``repro.kernels.img_weights`` accelerates for batched/vectorized use.
-
-Bandwidth convention: the Gaussian kernel is ``N(θ | θ^m_{t_m}, h² I_d)``; the
-paper's §3.3 occasionally writes ``h`` where dimensional consistency requires
-``h²`` — we use ``h²`` throughout (matching §3.2 and the annealed schedule).
+The 428-line monolith this module used to be was split into the registry-
+backed ``repro.core.combiners`` package (api / parametric / img / baselines /
+online). Every historical public name is re-exported here with its original
+signature; new code should resolve combiners through
+``repro.core.combiners.get_combiner(name)`` instead.
 """
 
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import bandwidth as bw
-from repro.core.gaussian import (
-    GaussianMoments,
-    fit_moments,
-    log_normal_pdf,
-    product_moments,
-    product_moments_diag,
-    sample_gaussian,
+from repro.core.combiners import (  # noqa: F401
+    CombineResult,
+    OnlineMoments,
+    consensus_weighted,
+    log_weight_bruteforce,
+    online_init,
+    online_product,
+    online_update,
+    parametric,
+    pool,
+    subpost_average,
 )
+from repro.core.combiners import img as _img
 
 Schedule = Callable[[jnp.ndarray], jnp.ndarray]
-
-
-class CombineResult(NamedTuple):
-    """Output of a combination procedure."""
-
-    samples: jnp.ndarray  # (n_draws, d) draws from the density-product estimate
-    acceptance_rate: jnp.ndarray  # IMG acceptance rate (1.0 for non-MCMC combiners)
-    moments: Optional[GaussianMoments] = None  # parametric product moments if computed
-
-
-# ---------------------------------------------------------------------------
-# helpers
-# ---------------------------------------------------------------------------
-
-
-def _counts_or_full(samples: jnp.ndarray, counts: Optional[jnp.ndarray]) -> jnp.ndarray:
-    M, T, _ = samples.shape
-    if counts is None:
-        return jnp.full((M,), T, dtype=jnp.int32)
-    return counts.astype(jnp.int32)
-
-
-def _masks(samples: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
-    _, T, _ = samples.shape
-    return (jnp.arange(T)[None, :] < counts[:, None]).astype(samples.dtype)  # (M, T)
-
-
-def log_weight_bruteforce(theta_sel: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
-    """Unnormalized log w_t (Eq. 3.5) for selected samples ``(..., M, d)``.
-
-    log w_t = Σ_m log N(θ^m | θ̄, h² I) — the test oracle for the incremental
-    update and the reference for the Pallas kernel.
-    """
-    mean = jnp.mean(theta_sel, axis=-2, keepdims=True)
-    sse = jnp.sum((theta_sel - mean) ** 2, axis=(-1, -2))
-    m, d = theta_sel.shape[-2], theta_sel.shape[-1]
-    return -0.5 * sse / (h**2) - m * (d / 2.0) * jnp.log(2.0 * jnp.pi * h**2)
-
-
-# ---------------------------------------------------------------------------
-# §3.1 parametric
-# ---------------------------------------------------------------------------
-
-
-def parametric(
-    key: jax.Array,
-    samples: jnp.ndarray,
-    n_draws: int,
-    *,
-    counts: Optional[jnp.ndarray] = None,
-    diag: bool = False,
-) -> CombineResult:
-    """Sample from the Gaussian product estimate (Eqs. 3.1–3.2)."""
-    M, T, d = samples.shape
-    counts = _counts_or_full(samples, counts)
-    masks = _masks(samples, counts)
-    moments = jax.vmap(lambda s, mk: fit_moments(s, mk, diag=diag))(samples, masks)
-    if diag:
-        prod = product_moments_diag(moments.mean, moments.cov)
-    else:
-        prod = product_moments(moments.mean, moments.cov)
-    draws = sample_gaussian(key, prod, n_draws)
-    return CombineResult(samples=draws, acceptance_rate=jnp.ones(()), moments=prod)
-
-
-# ---------------------------------------------------------------------------
-# §3.2 nonparametric — Algorithm 1 (IMG over mixture indices)
-# ---------------------------------------------------------------------------
-
-
-class _ImgCarry(NamedTuple):
-    key: jax.Array
-    t_idx: jnp.ndarray  # (M,) current component indices
-    theta_sel: jnp.ndarray  # (M, d) samples[m, t_idx[m]]
-    mean: jnp.ndarray  # (d,) running θ̄_t
-    sumsq: jnp.ndarray  # () running Σ_m ‖θ^m_{t_m}‖²
-    extra: jnp.ndarray  # () running Σ_m aux[m, t_m] (semiparametric term3; 0 o.w.)
-    n_accept: jnp.ndarray  # () accepted proposals
-
-
-def _init_img_carry(
-    key: jax.Array,
-    samples: jnp.ndarray,
-    counts: jnp.ndarray,
-    aux: Optional[jnp.ndarray],
-) -> _ImgCarry:
-    M, T, d = samples.shape
-    key, sub = jax.random.split(key)
-    t0 = jax.random.randint(sub, (M,), 0, counts)  # Alg 1 line 1
-    theta_sel = jnp.take_along_axis(samples, t0[:, None, None], axis=1)[:, 0, :]
-    extra = jnp.zeros(()) if aux is None else jnp.sum(aux[jnp.arange(M), t0])
-    return _ImgCarry(
-        key=key,
-        t_idx=t0,
-        theta_sel=theta_sel,
-        mean=jnp.mean(theta_sel, axis=0),
-        sumsq=jnp.sum(theta_sel**2),
-        extra=extra,
-        n_accept=jnp.zeros(()),
-    )
-
-
-def _img_gibbs_sweep(
-    carry: _ImgCarry,
-    samples: jnp.ndarray,
-    counts: jnp.ndarray,
-    h: jnp.ndarray,
-    aux: Optional[jnp.ndarray],
-    extra_logweight: Optional[Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]],
-) -> _ImgCarry:
-    """One sweep of Alg 1 lines 4–11: propose a new index for each m in turn.
-
-    ``aux`` (M, T): per-sample additive log-weight terms, gathered incrementally
-    (semiparametric −log N(θ^m_t | μ̂_m, Σ̂_m); None ⇒ 0).
-    ``extra_logweight(mean, extra_sum)``: state-level additive log-weight (the
-    semiparametric log N(θ̄ | μ̂_M, Σ̂_M + h²/M I) term; None ⇒ 0).
-    """
-    M, T, d = samples.shape
-    inv_m = 1.0 / M
-
-    def log_w(mean, sumsq, extra):
-        sse = sumsq - M * jnp.sum(mean**2)
-        lw = -0.5 * sse / (h**2)
-        if extra_logweight is not None:
-            lw = lw + extra_logweight(mean, extra)
-        return lw
-
-    def body(carry: _ImgCarry, m: jnp.ndarray) -> Tuple[_ImgCarry, None]:
-        key, k_prop, k_acc = jax.random.split(carry.key, 3)
-        c_m = jax.random.randint(k_prop, (), 0, counts[m])  # line 6
-        theta_new = samples[m, c_m]
-        theta_old = carry.theta_sel[m]
-        mean_new = carry.mean + (theta_new - theta_old) * inv_m
-        sumsq_new = carry.sumsq + jnp.sum(theta_new**2) - jnp.sum(theta_old**2)
-        extra_new = (
-            carry.extra
-            if aux is None
-            else carry.extra - aux[m, carry.t_idx[m]] + aux[m, c_m]
-        )
-        log_ratio = log_w(mean_new, sumsq_new, extra_new) - log_w(
-            carry.mean, carry.sumsq, carry.extra
-        )
-        accept = jnp.log(jax.random.uniform(k_acc)) < log_ratio  # lines 7–8
-        new_carry = _ImgCarry(
-            key=key,
-            t_idx=jnp.where(accept, carry.t_idx.at[m].set(c_m), carry.t_idx),
-            theta_sel=jnp.where(accept, carry.theta_sel.at[m].set(theta_new), carry.theta_sel),
-            mean=jnp.where(accept, mean_new, carry.mean),
-            sumsq=jnp.where(accept, sumsq_new, carry.sumsq),
-            extra=jnp.where(accept, extra_new, carry.extra),
-            n_accept=carry.n_accept + accept,
-        )
-        return new_carry, None
-
-    carry, _ = jax.lax.scan(body, carry, jnp.arange(M))
-    return carry
 
 
 def nonparametric_img(
@@ -218,40 +40,10 @@ def nonparametric_img(
     schedule: Optional[Schedule] = None,
     rescale: bool = False,
 ) -> CombineResult:
-    """Algorithm 1 — asymptotically exact sampling from ∏_m KDE(p_m).
-
-    ``schedule``: bandwidth h_i (defaults to the paper's annealed i^{-1/(4+d)}).
-    ``rescale``: multiply the schedule by the pooled sample std (production
-    robustness; off by default = verbatim Algorithm 1).
-    """
-    M, T, d = samples.shape
-    counts = _counts_or_full(samples, counts)
-    if schedule is None:
-        scale = bw.pooled_scale(samples) if rescale else 1.0
-        schedule = bw.annealed(d, scale=scale)
-
-    carry = _init_img_carry(key, samples, counts, aux=None)
-
-    def step(carry: _ImgCarry, i: jnp.ndarray):
-        h = schedule(i + 1).astype(samples.dtype)  # line 3 (1-based)
-        carry = _img_gibbs_sweep(carry, samples, counts, h, None, None)
-        key, k_draw = jax.random.split(carry.key)
-        carry = carry._replace(key=key)
-        # line 12: θ_i ~ N(θ̄_t, h²/M I)
-        theta = carry.mean + jax.random.normal(k_draw, (d,), samples.dtype) * h / jnp.sqrt(
-            jnp.asarray(M, samples.dtype)
-        )
-        return carry, theta
-
-    carry, draws = jax.lax.scan(step, carry, jnp.arange(n_draws))
-    return CombineResult(
-        samples=draws, acceptance_rate=carry.n_accept / (n_draws * M), moments=None
+    """Algorithm 1 (§3.2) — historical signature; see ``combiners.img``."""
+    return _img.nonparametric(
+        key, samples, n_draws, counts=counts, schedule=schedule, rescale=rescale
     )
-
-
-# ---------------------------------------------------------------------------
-# §3.3 semiparametric
-# ---------------------------------------------------------------------------
 
 
 def semiparametric_img(
@@ -264,165 +56,13 @@ def semiparametric_img(
     rescale: bool = False,
     nonparametric_weights: bool = False,
 ) -> CombineResult:
-    """§3.3 semiparametric combiner.
-
-    Components are N(μ_t, Σ_t) with  Σ_t = (M/h² I + Σ̂_M^{-1})^{-1},
-    μ_t = Σ_t (M/h² θ̄_t + Σ̂_M^{-1} μ̂_M).
-
-    ``nonparametric_weights=False``: IMG weights W_t (paper's primary §3.3 form)
-        log W_t = log w_t + log N(θ̄_t | μ̂_M, Σ̂_M + h²/M I)
-                  − Σ_m log N(θ^m_{t_m} | μ̂_m, Σ̂_m).
-    ``nonparametric_weights=True``: the paper's second variant — weights w_t
-        (higher IMG acceptance), same semiparametric components.
-    """
-    M, T, d = samples.shape
-    counts = _counts_or_full(samples, counts)
-    masks = _masks(samples, counts)
-    if schedule is None:
-        scale = bw.pooled_scale(samples) if rescale else 1.0
-        schedule = bw.annealed(d, scale=scale)
-
-    # Parametric start: per-subposterior moments and their Gaussian product.
-    moments = jax.vmap(lambda s, mk: fit_moments(s, mk))(samples, masks)
-    prod = product_moments(moments.mean, moments.cov)
-    lam_m = jnp.linalg.inv(prod.cov + 1e-10 * jnp.eye(d))  # Σ̂_M^{-1}
-    eta_m = lam_m @ prod.mean  # Σ̂_M^{-1} μ̂_M
-
-    if nonparametric_weights:
-        aux = None
-        extra_lw = None
-    else:
-        # term3: −Σ_m log N(θ^m_{t_m} | μ̂_m, Σ̂_m), gathered incrementally.
-        aux = -jax.vmap(lambda s, mom: log_normal_pdf(s, mom[0], mom[1]))(
-            samples, (moments.mean, moments.cov)
-        )  # (M, T)
-
-    carry = _init_img_carry(key, samples, counts, aux=aux)
-
-    def step(carry: _ImgCarry, i: jnp.ndarray):
-        h = schedule(i + 1).astype(samples.dtype)
-        h2 = h**2
-        if nonparametric_weights:
-            extra_lw_i = None
-        else:
-            cov_i = prod.cov + (h2 / M) * jnp.eye(d)
-
-            def extra_lw_i(mean, extra_sum):
-                # + log N(θ̄ | μ̂_M, Σ̂_M + h²/M I)  + Σ_m aux  (aux already −logN)
-                return log_normal_pdf(mean, prod.mean, cov_i) + extra_sum
-
-        carry = _img_gibbs_sweep(carry, samples, counts, h, aux, extra_lw_i)
-        key, k_draw = jax.random.split(carry.key)
-        carry = carry._replace(key=key)
-        # Draw from the semiparametric component N(μ_t, Σ_t) via the precision
-        # form: P = M/h² I + Λ_M, θ = μ_t + chol(P)^{-T} ε.
-        prec = (M / h2) * jnp.eye(d) + lam_m
-        chol_p = jnp.linalg.cholesky(prec)
-        rhs = (M / h2) * carry.mean + eta_m
-        mu_t = jax.scipy.linalg.cho_solve((chol_p, True), rhs)
-        eps = jax.random.normal(k_draw, (d,), samples.dtype)
-        theta = mu_t + jax.scipy.linalg.solve_triangular(chol_p.T, eps, lower=False)
-        return carry, theta
-
-    carry, draws = jax.lax.scan(step, carry, jnp.arange(n_draws))
-    return CombineResult(
-        samples=draws, acceptance_rate=carry.n_accept / (n_draws * M), moments=prod
+    """§3.3 semiparametric combiner — historical signature; see ``combiners.img``."""
+    return _img.semiparametric(
+        key,
+        samples,
+        n_draws,
+        counts=counts,
+        schedule=schedule,
+        rescale=rescale,
+        nonparametric_weights=nonparametric_weights,
     )
-
-
-# ---------------------------------------------------------------------------
-# §7/§8 baselines
-# ---------------------------------------------------------------------------
-
-
-def subpost_average(
-    samples: jnp.ndarray, *, counts: Optional[jnp.ndarray] = None
-) -> jnp.ndarray:
-    """"subpostAvg": θ_t = (1/M) Σ_m θ^m_t — one aligned draw per machine.
-
-    With ragged counts, index t wraps modulo counts[m] so every machine always
-    contributes (the baseline stays defined under stragglers).
-    """
-    M, T, d = samples.shape
-    counts = _counts_or_full(samples, counts)
-    idx = jnp.arange(T)[None, :] % counts[:, None]  # (M, T)
-    gathered = jnp.take_along_axis(samples, idx[:, :, None], axis=1)
-    return jnp.mean(gathered, axis=0)
-
-
-def consensus_weighted(
-    samples: jnp.ndarray, *, counts: Optional[jnp.ndarray] = None
-) -> jnp.ndarray:
-    """Consensus Monte Carlo (Scott et al. 2013): precision-weighted averaging
-
-        θ_t = (Σ_m Σ̂_m^{-1})^{-1} Σ_m Σ̂_m^{-1} θ^m_t.
-
-    The paper (§7) views this as a relaxation of Algorithm 1; it is one of the
-    experimental baselines.
-    """
-    M, T, d = samples.shape
-    counts = _counts_or_full(samples, counts)
-    masks = _masks(samples, counts)
-    moments = jax.vmap(lambda s, mk: fit_moments(s, mk))(samples, masks)
-    precs = jax.vmap(lambda c: jnp.linalg.inv(c + 1e-10 * jnp.eye(d)))(moments.cov)
-    total = jnp.sum(precs, axis=0)
-    chol = jnp.linalg.cholesky(total)
-    idx = jnp.arange(T)[None, :] % counts[:, None]
-    gathered = jnp.take_along_axis(samples, idx[:, :, None], axis=1)  # (M, T, d)
-    weighted = jnp.einsum("mij,mtj->ti", precs, gathered)
-    return jax.scipy.linalg.cho_solve((chol, True), weighted.T).T
-
-
-def pool(samples: jnp.ndarray, *, counts: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """"subpostPool": the union of all subposterior samples.
-
-    Ragged counts: invalid rows are replaced by wrapping valid ones so the
-    output stays a dense ``(M·T, d)`` array.
-    """
-    M, T, d = samples.shape
-    counts = _counts_or_full(samples, counts)
-    idx = jnp.arange(T)[None, :] % counts[:, None]
-    gathered = jnp.take_along_axis(samples, idx[:, :, None], axis=1)
-    return gathered.reshape(M * T, d)
-
-
-# ---------------------------------------------------------------------------
-# Online parametric combiner (paper §4: combine as samples stream in)
-# ---------------------------------------------------------------------------
-
-
-class OnlineMoments(NamedTuple):
-    """Welford running moments per subposterior — O(d²) state, O(1) per sample."""
-
-    count: jnp.ndarray  # (M,)
-    mean: jnp.ndarray  # (M, d)
-    m2: jnp.ndarray  # (M, d, d) sum of outer products of residuals
-
-
-def online_init(M: int, d: int, dtype=jnp.float32) -> OnlineMoments:
-    return OnlineMoments(
-        count=jnp.zeros((M,), dtype),
-        mean=jnp.zeros((M, d), dtype),
-        m2=jnp.zeros((M, d, d), dtype),
-    )
-
-
-def online_update(state: OnlineMoments, m: jnp.ndarray, theta: jnp.ndarray) -> OnlineMoments:
-    """Fold one new sample ``theta`` (d,) from machine ``m`` into the moments."""
-    n = state.count[m] + 1.0
-    delta = theta - state.mean[m]
-    mean_m = state.mean[m] + delta / n
-    m2_m = state.m2[m] + jnp.outer(delta, theta - mean_m)
-    return OnlineMoments(
-        count=state.count.at[m].set(n),
-        mean=state.mean.at[m].set(mean_m),
-        m2=state.m2.at[m].set(m2_m),
-    )
-
-
-def online_product(state: OnlineMoments, *, jitter: float = 1e-8) -> GaussianMoments:
-    """Current parametric product estimate from streaming moments."""
-    d = state.mean.shape[-1]
-    denom = jnp.maximum(state.count - 1.0, 1.0)[:, None, None]
-    covs = state.m2 / denom + jitter * jnp.eye(d)
-    return product_moments(state.mean, covs)

@@ -1,0 +1,80 @@
+"""Combiner engine: registry-backed subposterior combination — paper §3.
+
+Every combination procedure in the paper (and its experimental baselines)
+lives here behind one registry. Resolve by name with
+``get_combiner(name)(key, samples, n_draws, counts=..., **options)``;
+enumerate with :func:`available_combiners`.
+
+Registered combiners ↔ paper sections
+-------------------------------------
+==========================  =======  ==================================================
+registry name               paper    procedure
+==========================  =======  ==================================================
+``parametric``              §3.1     Gaussian (BvM) product of subposterior moments —
+                                     approximate, fast (Eqs. 3.1–3.2)
+``nonparametric``           §3.2     Algorithm 1: IMG sampling from the product of
+                                     subposterior KDEs — asymptotically exact
+``semiparametric``          §3.3     Hjort–Glad product with weights W_t —
+                                     asymptotically exact, parametric efficiency
+``semiparametric_w``        §3.3     second variant: semiparametric components with
+                                     nonparametric weights w_t (higher acceptance)
+``subpost_average``         §8       "subpostAvg" baseline: uniform average of aligned
+                                     draws (alias ``subpostAvg``)
+``consensus``               §7       Consensus Monte Carlo (Scott et al.):
+                                     precision-weighted averaging
+``pool``                    §8       "subpostPool" baseline: union of all subposterior
+                                     samples (alias ``subpostPool``)
+==========================  =======  ==================================================
+
+The IMG combiners additionally accept ``n_batch`` (independent vmapped index
+chains — see :mod:`repro.core.combiners.img`) and ``weight_eval="kernel"``
+(vectorized sweeps scored by the Pallas ``repro.kernels.img_weights``
+kernel). The pairwise-tree reduction (:mod:`repro.core.tree_combine`), the
+CLI driver (:mod:`repro.launch.mcmc_run`), the benchmarks, and the mesh
+EP-MCMC final stage (:func:`repro.distributed.epmcmc.combine_gathered`) all
+dispatch through this registry; adding a combiner here makes it available to
+every consumer at once.
+
+Layout convention: subposterior samples are a dense array ``(M, T, d)``.
+Ragged sample counts (straggler chains — paper footnote 1) are supported via
+``counts (M,)``: chain m's valid samples are rows ``[0, counts[m])``.
+
+Bandwidth convention: the Gaussian kernel is ``N(θ | θ^m_{t_m}, h² I_d)``;
+the paper's §3.3 occasionally writes ``h`` where dimensional consistency
+requires ``h²`` — we use ``h²`` throughout (matching §3.2 and the annealed
+schedule).
+"""
+
+from repro.core.combiners.api import (  # noqa: F401
+    Combiner,
+    CombineResult,
+    available_combiners,
+    canonical_combiners,
+    counts_or_full,
+    get_combiner,
+    log_weight_bruteforce,
+    ragged_gather,
+    register,
+    valid_masks,
+)
+from repro.core.combiners.baselines import (  # noqa: F401
+    consensus_weighted,
+    pool,
+    subpost_average,
+)
+from repro.core.combiners.img import (  # noqa: F401
+    ImgWeightModel,
+    nonparametric,
+    nonparametric_model,
+    run_img,
+    semiparametric,
+    semiparametric_model,
+    semiparametric_w,
+)
+from repro.core.combiners.online import (  # noqa: F401
+    OnlineMoments,
+    online_init,
+    online_product,
+    online_update,
+)
+from repro.core.combiners.parametric import parametric  # noqa: F401

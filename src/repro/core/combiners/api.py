@@ -1,0 +1,135 @@
+"""Combiner engine API: result type, registry, and shared array helpers.
+
+A *combiner* is any callable with the uniform signature
+
+    combiner(key, samples, n_draws, *, counts=None, **options) -> CombineResult
+
+where ``samples`` is the dense ``(M, T, d)`` subposterior stack and ``counts
+(M,)`` marks the valid prefix of each chain (ragged/straggler support — paper
+footnote 1). Options a given combiner does not understand are ignored, so
+callers (tree reduction, CLI, benchmarks, mesh EP-MCMC) can dispatch through
+:func:`get_combiner` without per-method branching.
+
+Registry: implementations self-register at import time via :func:`register`;
+consumers resolve them by name with :func:`get_combiner` and enumerate them
+with :func:`available_combiners`. Importing :mod:`repro.core.combiners`
+populates the registry with every built-in combiner.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussian import GaussianMoments
+
+
+class CombineResult(NamedTuple):
+    """Output of a combination procedure.
+
+    ``extras`` carries combiner-specific diagnostics (e.g. per-chain IMG
+    acceptance, sweep counts, bandwidth at the final draw) without widening
+    the core contract; non-MCMC combiners leave it ``None``.
+    """
+
+    samples: jnp.ndarray  # (n_draws, d) draws from the density-product estimate
+    acceptance_rate: jnp.ndarray  # IMG acceptance rate (1.0 for non-MCMC combiners)
+    moments: Optional[GaussianMoments] = None  # parametric product moments if computed
+    extras: Optional[Dict[str, jnp.ndarray]] = None  # combiner-specific diagnostics
+
+
+class Combiner(Protocol):
+    """Uniform combiner callable; unknown keyword options must be ignored."""
+
+    def __call__(
+        self,
+        key: jax.Array,
+        samples: jnp.ndarray,
+        n_draws: int,
+        *,
+        counts: Optional[jnp.ndarray] = None,
+        **options,
+    ) -> CombineResult: ...
+
+
+_REGISTRY: Dict[str, Combiner] = {}
+_CANONICAL: Dict[str, Combiner] = {}  # primary names only (no aliases)
+
+
+def register(name: str, *aliases: str) -> Callable[[Combiner], Combiner]:
+    """Decorator: add a combiner to the registry under ``name`` (+ aliases)."""
+
+    def deco(fn: Combiner) -> Combiner:
+        for key in (name, *aliases):
+            if key in _REGISTRY:
+                raise ValueError(f"combiner {key!r} already registered")
+            _REGISTRY[key] = fn
+        _CANONICAL[name] = fn
+        return fn
+
+    return deco
+
+
+def get_combiner(name: str) -> Combiner:
+    """Resolve a combiner by registry name (raises KeyError with choices)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown combiner {name!r}; available: {', '.join(available_combiners())}"
+        ) from None
+
+
+def available_combiners() -> Tuple[str, ...]:
+    """All registered combiner names (aliases included), sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def canonical_combiners() -> Tuple[str, ...]:
+    """Primary registration names only (aliases dropped), sorted."""
+    return tuple(sorted(_CANONICAL))
+
+
+# ---------------------------------------------------------------------------
+# shared array helpers
+# ---------------------------------------------------------------------------
+
+
+def counts_or_full(samples: jnp.ndarray, counts: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Normalize ``counts`` to an int32 ``(M,)`` vector (None ⇒ all-T)."""
+    M, T, _ = samples.shape
+    if counts is None:
+        return jnp.full((M,), T, dtype=jnp.int32)
+    return counts.astype(jnp.int32)
+
+
+def valid_masks(samples: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """``(M, T)`` 0/1 mask of valid rows under ragged ``counts``."""
+    _, T, _ = samples.shape
+    return (jnp.arange(T)[None, :] < counts[:, None]).astype(samples.dtype)
+
+
+def ragged_gather(samples: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """Densify ragged chains: row t of chain m becomes ``samples[m, t % counts[m]]``.
+
+    Every machine keeps contributing under stragglers and the output stays a
+    dense ``(M, T, d)`` array — the shared gather behind subpostAvg, pool and
+    consensus (previously duplicated at each call site).
+    """
+    _, T, _ = samples.shape
+    idx = jnp.arange(T)[None, :] % counts[:, None]  # (M, T)
+    return jnp.take_along_axis(samples, idx[:, :, None], axis=1)
+
+
+def log_weight_bruteforce(theta_sel: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Unnormalized log w_t (Eq. 3.5) for selected samples ``(..., M, d)``.
+
+    log w_t = Σ_m log N(θ^m | θ̄, h² I) — the test oracle for the incremental
+    update and the reference for the Pallas ``img_weights`` kernel.
+    """
+    mean = jnp.mean(theta_sel, axis=-2, keepdims=True)
+    sse = jnp.sum((theta_sel - mean) ** 2, axis=(-1, -2))
+    m, d = theta_sel.shape[-2], theta_sel.shape[-1]
+    return -0.5 * sse / (h**2) - m * (d / 2.0) * jnp.log(2.0 * jnp.pi * h**2)

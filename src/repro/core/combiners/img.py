@@ -1,0 +1,543 @@
+"""The shared IMG engine behind every asymptotically exact combiner (§3.2/§3.3).
+
+One Algorithm-1 core, parameterized by a *weight model* (:class:`ImgWeightModel`):
+
+- nonparametric ``w_t`` (Eq. 3.5) with Gaussian KDE components       — §3.2
+- semiparametric ``W_t`` (Hjort–Glad correction)                      — §3.3
+- semiparametric components with ``w_t`` weights (higher acceptance)  — §3.3
+
+replacing the two duplicated scan bodies the old ``combine.py`` monolith
+carried. Complexity note (beyond-paper, algebraically exact): Algorithm 1 as
+written recomputes ``w_t`` from scratch per proposal — O(dTM²) total. We
+maintain the running component mean θ̄_t and Σ_m‖θ^m_{t_m}‖² incrementally,
+using  Σ_m ‖θ_m − θ̄‖² = Σ_m ‖θ_m‖² − M·‖θ̄‖², so each single-index proposal
+is O(d) and the whole run is O(dTM).
+
+Execution modes (:func:`run_img`):
+
+``n_batch=1`` (default)
+    The classic serial chain: one sweep of M Metropolis-within-Gibbs index
+    proposals per emitted draw.
+
+``n_batch=B > 1``
+    B independent IMG index-chains run under ``vmap``, each doing
+    ``ceil(n_draws/B)`` sweeps from independently-initialized indices. Every
+    chain is a bona-fide (shorter) run of Algorithm 1 — identical per-chain
+    stationary distribution — so the serial O(n_draws·M) recursion becomes
+    ~B-way parallel work.
+
+``weight_eval="kernel"``
+    The vectorized all-M-proposals-per-sweep variant: each sweep draws index
+    proposals for *all* machines up front, evaluates all B·M candidate
+    mixture weights in one batched call to the Pallas
+    :func:`repro.kernels.img_weights.img_log_weights` kernel, and then runs
+    the accept/reject recursion on O(M) scalars per site using an exact
+    rank-one correction (below) — the sequential chain's distribution is
+    preserved exactly, while all O(d)-heavy work becomes one kernel call plus
+    one Gram matmul per sweep.
+
+    Correction math: with base state (θ̄₀, Σ‖θ‖²₀), candidate deltas
+    Δ_m = cand_m − θ_m and accepted set J at site m,
+
+        log w(state_J ∪ {m}) = LW_m − (1/2h²)·[A − 2·s_B − (s_G + 2·g_m)/M]
+
+    where LW_m is the kernel's base-state weight of the single-site-m
+    modification, A = Σ_J (‖cand_j‖²−‖θ_j‖²), s_B = θ̄₀·S, s_G = ‖S‖²,
+    g_m = S·Δ_m, S = Σ_J Δ_j — all maintained in O(M) per site from the
+    precomputed Gram matrix G = ΔΔᵀ. Supported for the pure-``w_t`` weight
+    models (nonparametric, semiparametric-with-w_t).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bandwidth as bw
+from repro.core.combiners.api import (
+    CombineResult,
+    counts_or_full,
+    register,
+    valid_masks,
+)
+from repro.core.gaussian import (
+    GaussianMoments,
+    fit_moments,
+    log_normal_pdf,
+    product_moments,
+)
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class ImgWeightModel(NamedTuple):
+    """What varies between §3.2 and §3.3: the weight terms and component law.
+
+    ``aux`` (M, T): per-sample additive log-weight terms, gathered
+    incrementally (semiparametric −log N(θ^m_t | μ̂_m, Σ̂_m); None ⇒ 0).
+    ``extra_logweight(h)``: builds the state-level additive log-weight for
+    bandwidth h (the semiparametric log N(θ̄ | μ̂_M, Σ̂_M + h²/M I) term;
+    None ⇒ 0). ``draw(key, mean, h)``: one draw from the mixture component
+    selected by the current indices. ``moments``: parametric product moments
+    if the model computed them (reported in :class:`CombineResult`).
+    """
+
+    aux: Optional[jnp.ndarray]
+    extra_logweight: Optional[Callable[[jnp.ndarray], Callable]]
+    draw: Callable[[jax.Array, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    moments: Optional[GaussianMoments]
+
+
+# ---------------------------------------------------------------------------
+# per-chain carry + incremental Gibbs sweep (Alg 1 lines 4–11)
+# ---------------------------------------------------------------------------
+
+
+class _ImgCarry(NamedTuple):
+    key: jax.Array
+    t_idx: jnp.ndarray  # (M,) current component indices
+    theta_sel: jnp.ndarray  # (M, d) samples[m, t_idx[m]]
+    mean: jnp.ndarray  # (d,) running θ̄_t
+    sumsq: jnp.ndarray  # () running Σ_m ‖θ^m_{t_m}‖²
+    extra: jnp.ndarray  # () running Σ_m aux[m, t_m] (semiparametric term3; 0 o.w.)
+    n_accept: jnp.ndarray  # () accepted proposals
+
+
+def _init_img_carry(
+    key: jax.Array,
+    samples: jnp.ndarray,
+    counts: jnp.ndarray,
+    aux: Optional[jnp.ndarray],
+) -> _ImgCarry:
+    M, T, d = samples.shape
+    key, sub = jax.random.split(key)
+    t0 = jax.random.randint(sub, (M,), 0, counts)  # Alg 1 line 1
+    theta_sel = jnp.take_along_axis(samples, t0[:, None, None], axis=1)[:, 0, :]
+    extra = jnp.zeros(()) if aux is None else jnp.sum(aux[jnp.arange(M), t0])
+    return _ImgCarry(
+        key=key,
+        t_idx=t0,
+        theta_sel=theta_sel,
+        mean=jnp.mean(theta_sel, axis=0),
+        sumsq=jnp.sum(theta_sel**2),
+        extra=extra,
+        n_accept=jnp.zeros(()),
+    )
+
+
+def _img_gibbs_sweep(
+    carry: _ImgCarry,
+    samples: jnp.ndarray,
+    counts: jnp.ndarray,
+    h: jnp.ndarray,
+    aux: Optional[jnp.ndarray],
+    extra_logweight: Optional[Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]],
+) -> _ImgCarry:
+    """One sweep of Alg 1 lines 4–11: propose a new index for each m in turn."""
+    M, T, d = samples.shape
+    inv_m = 1.0 / M
+
+    def log_w(mean, sumsq, extra):
+        sse = sumsq - M * jnp.sum(mean**2)
+        lw = -0.5 * sse / (h**2)
+        if extra_logweight is not None:
+            lw = lw + extra_logweight(mean, extra)
+        return lw
+
+    def body(carry: _ImgCarry, m: jnp.ndarray) -> Tuple[_ImgCarry, None]:
+        key, k_prop, k_acc = jax.random.split(carry.key, 3)
+        c_m = jax.random.randint(k_prop, (), 0, counts[m])  # line 6
+        theta_new = samples[m, c_m]
+        theta_old = carry.theta_sel[m]
+        mean_new = carry.mean + (theta_new - theta_old) * inv_m
+        sumsq_new = carry.sumsq + jnp.sum(theta_new**2) - jnp.sum(theta_old**2)
+        extra_new = (
+            carry.extra
+            if aux is None
+            else carry.extra - aux[m, carry.t_idx[m]] + aux[m, c_m]
+        )
+        log_ratio = log_w(mean_new, sumsq_new, extra_new) - log_w(
+            carry.mean, carry.sumsq, carry.extra
+        )
+        accept = jnp.log(jax.random.uniform(k_acc)) < log_ratio  # lines 7–8
+        new_carry = _ImgCarry(
+            key=key,
+            t_idx=jnp.where(accept, carry.t_idx.at[m].set(c_m), carry.t_idx),
+            theta_sel=jnp.where(accept, carry.theta_sel.at[m].set(theta_new), carry.theta_sel),
+            mean=jnp.where(accept, mean_new, carry.mean),
+            sumsq=jnp.where(accept, sumsq_new, carry.sumsq),
+            extra=jnp.where(accept, extra_new, carry.extra),
+            n_accept=carry.n_accept + accept,
+        )
+        return new_carry, None
+
+    carry, _ = jax.lax.scan(body, carry, jnp.arange(M))
+    return carry
+
+
+def _run_chain(
+    key: jax.Array,
+    samples: jnp.ndarray,
+    counts: jnp.ndarray,
+    n_sweeps: int,
+    schedule: Schedule,
+    model: ImgWeightModel,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One serial IMG chain: ``n_sweeps`` anneal steps, one draw per sweep."""
+    carry = _init_img_carry(key, samples, counts, model.aux)
+
+    def step(carry: _ImgCarry, i: jnp.ndarray):
+        h = schedule(i + 1).astype(samples.dtype)  # line 3 (1-based)
+        extra_lw = model.extra_logweight(h) if model.extra_logweight is not None else None
+        carry = _img_gibbs_sweep(carry, samples, counts, h, model.aux, extra_lw)
+        key, k_draw = jax.random.split(carry.key)
+        carry = carry._replace(key=key)
+        theta = model.draw(k_draw, carry.mean, h)  # line 12
+        return carry, theta
+
+    carry, draws = jax.lax.scan(step, carry, jnp.arange(n_sweeps))
+    return draws, carry.n_accept
+
+
+# ---------------------------------------------------------------------------
+# vectorized all-M-proposals sweep (Pallas weight kernel on the hot path)
+# ---------------------------------------------------------------------------
+
+
+def _img_kernel_sweep(
+    carry: _ImgCarry,  # batched: every leaf has a leading (B,) axis
+    samples: jnp.ndarray,
+    counts: jnp.ndarray,
+    h: jnp.ndarray,
+) -> _ImgCarry:
+    """One sweep for B chains at once, weights evaluated by the Pallas kernel.
+
+    All B·M candidate states (single-site modifications of each chain's base
+    state) are scored in one ``img_log_weights`` call; the site recursion then
+    runs on O(M) scalars per chain using the exact rank-one correction
+    derived in the module docstring — bitwise different, distribution-exact.
+    """
+    from repro.kernels.img_weights import img_log_weights
+
+    M, T, d = samples.shape
+    B = carry.mean.shape[0]
+    dtype = samples.dtype
+
+    keys = jax.vmap(lambda k: jax.random.split(k, 3))(carry.key)  # (B, 3, 2)
+    key_next, k_prop, k_acc = keys[:, 0], keys[:, 1], keys[:, 2]
+    c = jax.vmap(lambda k: jax.random.randint(k, (M,), 0, counts))(k_prop)  # (B, M)
+    u = jax.vmap(lambda k: jax.random.uniform(k, (M,)))(k_acc)  # (B, M)
+
+    cand = samples[jnp.arange(M)[None, :], c]  # (B, M, d) cand[b,m]=samples[m,c[b,m]]
+    delta = cand - carry.theta_sel  # (B, M, d) Δ_m
+    nsq = jnp.sum(cand**2, axis=-1) - jnp.sum(carry.theta_sel**2, axis=-1)  # (B, M)
+    b_dot = jnp.einsum("bd,bmd->bm", carry.mean, delta)  # θ̄₀·Δ_m
+    gram = jnp.einsum("bmd,bnd->bmn", delta, delta)  # Δ_j·Δ_m
+    msq0 = jnp.sum(carry.mean**2, axis=-1)  # (B,)
+
+    h32 = h.astype(jnp.float32)
+    inv2h2 = 0.5 / (h32 * h32)
+    log_norm = M * (d / 2.0) * jnp.log(2.0 * jnp.pi * h32 * h32)
+
+    # All B·M single-site candidate states, scored in one kernel call. A
+    # closed form for these base weights exists from the scalars above
+    # (LW_m = lw_cur0 − inv2h2·(nsq_m − 2·b_m − G_mm/M)); routing through the
+    # kernel instead is deliberate: it keeps the O(B·M²·d) bulk of the sweep
+    # in the offloadable Pallas path (same asymptotics as the Gram matmul),
+    # which is the TPU hot path this engine exists to feed.
+    eye = jnp.eye(M, dtype=dtype)[None, :, :, None]  # (1, prop, machine, 1)
+    theta_prop = (1.0 - eye) * carry.theta_sel[:, None, :, :] + eye * cand[:, :, None, :]
+    lw_base = img_log_weights(theta_prop.reshape(B * M, M, d), h32).reshape(B, M)
+
+    lw_cur0 = -(carry.sumsq - M * msq0) * inv2h2 - log_norm  # current-state weight
+
+    def site(state, m):
+        lw_cur, acc_nsq, s_b, s_g, g, a_mask, n_acc = state
+        g_m = g[:, m]
+        corr = -(acc_nsq - 2.0 * s_b - (s_g + 2.0 * g_m) / M) * inv2h2
+        lw_prop = lw_base[:, m] + corr
+        accept = jnp.log(u[:, m]) < lw_prop - lw_cur  # (B,)
+        af = accept.astype(jnp.float32)
+        return (
+            jnp.where(accept, lw_prop, lw_cur),
+            acc_nsq + af * nsq[:, m],
+            s_b + af * b_dot[:, m],
+            s_g + af * (2.0 * g_m + gram[:, m, m]),
+            g + af[:, None] * gram[:, m, :],
+            a_mask.at[:, m].set(accept),
+            n_acc + af,
+        ), None
+
+    zeros_b = jnp.zeros((B,), jnp.float32)
+    init = (
+        lw_cur0.astype(jnp.float32),
+        zeros_b,
+        zeros_b,
+        zeros_b,
+        jnp.zeros((B, M), jnp.float32),
+        jnp.zeros((B, M), bool),
+        zeros_b,
+    )
+    (_, _, _, _, _, a_mask, n_acc), _ = jax.lax.scan(site, init, jnp.arange(M))
+
+    af = a_mask.astype(dtype)
+    mean_new = carry.mean + jnp.einsum("bm,bmd->bd", af, delta) / M
+    sumsq_new = carry.sumsq + jnp.sum(af * nsq, axis=-1)
+    return carry._replace(
+        key=key_next,
+        t_idx=jnp.where(a_mask, c, carry.t_idx),
+        theta_sel=jnp.where(a_mask[:, :, None], cand, carry.theta_sel),
+        mean=mean_new,
+        sumsq=sumsq_new,
+        n_accept=carry.n_accept + n_acc,
+    )
+
+
+def _run_batched_kernel(
+    key: jax.Array,
+    samples: jnp.ndarray,
+    counts: jnp.ndarray,
+    n_sweeps: int,
+    n_batch: int,
+    schedule: Schedule,
+    model: ImgWeightModel,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """B chains × ``n_sweeps`` vectorized sweeps → ((n_sweeps, B, d), (B,))."""
+    M, T, d = samples.shape
+    keys = jax.random.split(key, n_batch)
+    carry = jax.vmap(lambda k: _init_img_carry(k, samples, counts, None))(keys)
+
+    def step(carry: _ImgCarry, i: jnp.ndarray):
+        h = schedule(i + 1).astype(samples.dtype)
+        carry = _img_kernel_sweep(carry, samples, counts, h)
+        split = jax.vmap(jax.random.split)(carry.key)  # (B, 2, 2)
+        carry = carry._replace(key=split[:, 0])
+        theta = jax.vmap(lambda k, mn: model.draw(k, mn, h))(split[:, 1], carry.mean)
+        return carry, theta
+
+    carry, draws = jax.lax.scan(step, carry, jnp.arange(n_sweeps))
+    return draws, carry.n_accept
+
+
+# ---------------------------------------------------------------------------
+# the engine entry point
+# ---------------------------------------------------------------------------
+
+
+def run_img(
+    key: jax.Array,
+    samples: jnp.ndarray,
+    n_draws: int,
+    model: ImgWeightModel,
+    *,
+    counts: jnp.ndarray,
+    schedule: Schedule,
+    n_batch: int = 1,
+    weight_eval: str = "incremental",
+) -> CombineResult:
+    """Run the IMG engine and package draws + diagnostics.
+
+    ``n_batch``: number of independent index-chains (each does
+    ``ceil(n_draws/n_batch)`` sweeps). ``weight_eval``: ``"incremental"``
+    (O(d) single-site recursion) or ``"kernel"`` (vectorized sweeps scored by
+    the Pallas ``img_weights`` kernel; pure-``w_t`` weight models only).
+    """
+    M, T, d = samples.shape
+    n_batch = max(1, min(int(n_batch), int(n_draws)))
+    n_sweeps = -(-n_draws // n_batch)  # ceil
+
+    if weight_eval == "kernel":
+        if model.aux is not None or model.extra_logweight is not None:
+            raise ValueError(
+                "weight_eval='kernel' supports pure-w_t weight models only "
+                "(nonparametric, or semiparametric with nonparametric_weights=True)"
+            )
+        draws, n_acc = _run_batched_kernel(
+            key, samples, counts, n_sweeps, n_batch, schedule, model
+        )
+        draws = draws.reshape(n_sweeps * n_batch, d)
+        per_chain = n_acc / (n_sweeps * M)
+        n_acc = jnp.sum(n_acc)
+    elif weight_eval == "incremental":
+        if n_batch == 1:
+            draws, n_acc = _run_chain(key, samples, counts, n_sweeps, schedule, model)
+            per_chain = (n_acc / (n_sweeps * M))[None]
+        else:
+            keys = jax.random.split(key, n_batch)
+            draws, n_acc = jax.vmap(
+                lambda k: _run_chain(k, samples, counts, n_sweeps, schedule, model)
+            )(keys)
+            draws = jnp.swapaxes(draws, 0, 1).reshape(n_sweeps * n_batch, d)
+            per_chain = n_acc / (n_sweeps * M)
+            n_acc = jnp.sum(n_acc)
+    else:
+        raise ValueError(f"unknown weight_eval {weight_eval!r}")
+
+    # ceil-rounding emits < n_batch surplus draws; drop the *earliest* (least
+    # annealed) rows so the kept draws are the best of every chain.
+    draws = draws[-n_draws:]
+    return CombineResult(
+        samples=draws,
+        acceptance_rate=n_acc / (n_sweeps * n_batch * M),
+        moments=model.moments,
+        extras={
+            "n_batch": jnp.asarray(n_batch),
+            "n_sweeps_per_chain": jnp.asarray(n_sweeps),
+            "per_chain_acceptance": per_chain,
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# weight models
+# ---------------------------------------------------------------------------
+
+
+def _resolve_schedule(
+    samples: jnp.ndarray, schedule: Optional[Schedule], rescale: bool
+) -> Schedule:
+    if schedule is not None:
+        return schedule
+    d = samples.shape[-1]
+    scale = bw.pooled_scale(samples) if rescale else 1.0
+    return bw.annealed(d, scale=scale)
+
+
+def nonparametric_model(samples: jnp.ndarray) -> ImgWeightModel:
+    """§3.2: weights w_t (Eq. 3.5), components N(θ̄_t, h²/M I)."""
+    M, _, d = samples.shape
+
+    def draw(key, mean, h):
+        eps = jax.random.normal(key, (d,), samples.dtype)
+        return mean + eps * h / jnp.sqrt(jnp.asarray(M, samples.dtype))
+
+    return ImgWeightModel(aux=None, extra_logweight=None, draw=draw, moments=None)
+
+
+def semiparametric_model(
+    samples: jnp.ndarray,
+    counts: jnp.ndarray,
+    *,
+    nonparametric_weights: bool = False,
+) -> ImgWeightModel:
+    """§3.3: components N(μ_t, Σ_t) with Σ_t = (M/h² I + Σ̂_M^{-1})^{-1},
+    μ_t = Σ_t (M/h² θ̄_t + Σ̂_M^{-1} μ̂_M).
+
+    ``nonparametric_weights=False``: IMG weights W_t (paper's primary form)
+        log W_t = log w_t + log N(θ̄_t | μ̂_M, Σ̂_M + h²/M I)
+                  − Σ_m log N(θ^m_{t_m} | μ̂_m, Σ̂_m).
+    ``nonparametric_weights=True``: the paper's second variant — weights w_t
+        (higher IMG acceptance), same semiparametric components.
+    """
+    M, T, d = samples.shape
+    masks = valid_masks(samples, counts)
+
+    # Parametric start: per-subposterior moments and their Gaussian product.
+    moments = jax.vmap(lambda s, mk: fit_moments(s, mk))(samples, masks)
+    prod = product_moments(moments.mean, moments.cov)
+    lam_m = jnp.linalg.inv(prod.cov + 1e-10 * jnp.eye(d))  # Σ̂_M^{-1}
+    eta_m = lam_m @ prod.mean  # Σ̂_M^{-1} μ̂_M
+
+    if nonparametric_weights:
+        aux = None
+        extra_logweight = None
+    else:
+        # term3: −Σ_m log N(θ^m_{t_m} | μ̂_m, Σ̂_m), gathered incrementally.
+        aux = -jax.vmap(lambda s, mom: log_normal_pdf(s, mom[0], mom[1]))(
+            samples, (moments.mean, moments.cov)
+        )  # (M, T)
+
+        def extra_logweight(h):
+            cov_i = prod.cov + (h**2 / M) * jnp.eye(d)
+
+            def term(mean, extra_sum):
+                # + log N(θ̄ | μ̂_M, Σ̂_M + h²/M I) + Σ_m aux  (aux already −logN)
+                return log_normal_pdf(mean, prod.mean, cov_i) + extra_sum
+
+            return term
+
+    def draw(key, mean, h):
+        # Precision form: P = M/h² I + Λ_M, θ = μ_t + chol(P)^{-T} ε.
+        h2 = h**2
+        prec = (M / h2) * jnp.eye(d) + lam_m
+        chol_p = jnp.linalg.cholesky(prec)
+        rhs = (M / h2) * mean + eta_m
+        mu_t = jax.scipy.linalg.cho_solve((chol_p, True), rhs)
+        eps = jax.random.normal(key, (d,), samples.dtype)
+        return mu_t + jax.scipy.linalg.solve_triangular(chol_p.T, eps, lower=False)
+
+    return ImgWeightModel(
+        aux=aux, extra_logweight=extra_logweight, draw=draw, moments=prod
+    )
+
+
+# ---------------------------------------------------------------------------
+# registered combiners
+# ---------------------------------------------------------------------------
+
+
+@register("nonparametric", "nonparametric_img")
+def nonparametric(
+    key: jax.Array,
+    samples: jnp.ndarray,
+    n_draws: int,
+    *,
+    counts: Optional[jnp.ndarray] = None,
+    schedule: Optional[Schedule] = None,
+    rescale: bool = False,
+    n_batch: int = 1,
+    weight_eval: str = "incremental",
+    **_ignored,
+) -> CombineResult:
+    """Algorithm 1 — asymptotically exact sampling from ∏_m KDE(p_m)."""
+    counts = counts_or_full(samples, counts)
+    schedule = _resolve_schedule(samples, schedule, rescale)
+    model = nonparametric_model(samples)
+    return run_img(
+        key, samples, n_draws, model,
+        counts=counts, schedule=schedule, n_batch=n_batch, weight_eval=weight_eval,
+    )
+
+
+@register("semiparametric", "semiparametric_img")
+def semiparametric(
+    key: jax.Array,
+    samples: jnp.ndarray,
+    n_draws: int,
+    *,
+    counts: Optional[jnp.ndarray] = None,
+    schedule: Optional[Schedule] = None,
+    rescale: bool = False,
+    nonparametric_weights: bool = False,
+    n_batch: int = 1,
+    weight_eval: str = "incremental",
+    **_ignored,
+) -> CombineResult:
+    """§3.3 semiparametric combiner (see :func:`semiparametric_model`)."""
+    counts = counts_or_full(samples, counts)
+    schedule = _resolve_schedule(samples, schedule, rescale)
+    model = semiparametric_model(
+        samples, counts, nonparametric_weights=nonparametric_weights
+    )
+    return run_img(
+        key, samples, n_draws, model,
+        counts=counts, schedule=schedule, n_batch=n_batch, weight_eval=weight_eval,
+    )
+
+
+@register("semiparametric_w", "semiparametric_wt")
+def semiparametric_w(
+    key: jax.Array,
+    samples: jnp.ndarray,
+    n_draws: int,
+    *,
+    counts: Optional[jnp.ndarray] = None,
+    **options,
+) -> CombineResult:
+    """§3.3 second variant: semiparametric components, nonparametric weights."""
+    options.pop("nonparametric_weights", None)
+    return semiparametric(
+        key, samples, n_draws, counts=counts, nonparametric_weights=True, **options
+    )

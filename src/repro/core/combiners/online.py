@@ -1,0 +1,46 @@
+"""Online parametric combiner (paper §4: combine as samples stream in)."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.gaussian import GaussianMoments, product_moments
+
+
+class OnlineMoments(NamedTuple):
+    """Welford running moments per subposterior — O(d²) state, O(1) per sample."""
+
+    count: jnp.ndarray  # (M,)
+    mean: jnp.ndarray  # (M, d)
+    m2: jnp.ndarray  # (M, d, d) sum of outer products of residuals
+
+
+def online_init(M: int, d: int, dtype=jnp.float32) -> OnlineMoments:
+    return OnlineMoments(
+        count=jnp.zeros((M,), dtype),
+        mean=jnp.zeros((M, d), dtype),
+        m2=jnp.zeros((M, d, d), dtype),
+    )
+
+
+def online_update(state: OnlineMoments, m: jnp.ndarray, theta: jnp.ndarray) -> OnlineMoments:
+    """Fold one new sample ``theta`` (d,) from machine ``m`` into the moments."""
+    n = state.count[m] + 1.0
+    delta = theta - state.mean[m]
+    mean_m = state.mean[m] + delta / n
+    m2_m = state.m2[m] + jnp.outer(delta, theta - mean_m)
+    return OnlineMoments(
+        count=state.count.at[m].set(n),
+        mean=state.mean.at[m].set(mean_m),
+        m2=state.m2.at[m].set(m2_m),
+    )
+
+
+def online_product(state: OnlineMoments, *, jitter: float = 1e-8) -> GaussianMoments:
+    """Current parametric product estimate from streaming moments."""
+    d = state.mean.shape[-1]
+    denom = jnp.maximum(state.count - 1.0, 1.0)[:, None, None]
+    covs = state.m2 / denom + jitter * jnp.eye(d)
+    return product_moments(state.mean, covs)

@@ -1,0 +1,43 @@
+"""§3.1 parametric combiner: Gaussian (BvM) product — approximate, fast."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.combiners.api import (
+    CombineResult,
+    counts_or_full,
+    register,
+    valid_masks,
+)
+from repro.core.gaussian import (
+    fit_moments,
+    product_moments,
+    product_moments_diag,
+    sample_gaussian,
+)
+
+
+@register("parametric")
+def parametric(
+    key: jax.Array,
+    samples: jnp.ndarray,
+    n_draws: int,
+    *,
+    counts: Optional[jnp.ndarray] = None,
+    diag: bool = False,
+    **_ignored,
+) -> CombineResult:
+    """Sample from the Gaussian product estimate (Eqs. 3.1–3.2)."""
+    counts = counts_or_full(samples, counts)
+    masks = valid_masks(samples, counts)
+    moments = jax.vmap(lambda s, mk: fit_moments(s, mk, diag=diag))(samples, masks)
+    if diag:
+        prod = product_moments_diag(moments.mean, moments.cov)
+    else:
+        prod = product_moments(moments.mean, moments.cov)
+    draws = sample_gaussian(key, prod, n_draws)
+    return CombineResult(samples=draws, acceptance_rate=jnp.ones(()), moments=prod)

@@ -22,7 +22,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import combine as cmb
+from repro.core.combiners import CombineResult, get_combiner
 
 
 def _combine_pairs(
@@ -33,19 +33,21 @@ def _combine_pairs(
     method: str,
     rescale: bool,
 ) -> jnp.ndarray:
+    combiner = get_combiner(method)
+
     def one(key, pair, cnt):
-        if method == "nonparametric":
-            res = cmb.nonparametric_img(key, pair, n_draws, counts=cnt, rescale=rescale)
-        elif method == "semiparametric":
-            res = cmb.semiparametric_img(key, pair, n_draws, counts=cnt, rescale=rescale)
-        elif method == "parametric":
-            res = cmb.parametric(key, pair, n_draws, counts=cnt)
-        else:
-            raise ValueError(f"unknown method {method!r}")
-        return res.samples
+        return combiner(key, pair, n_draws, counts=cnt, rescale=rescale).samples
 
     keys = jax.random.split(key, pairs.shape[0])
-    return jax.vmap(one)(keys, pairs, counts)
+    out = jax.vmap(one)(keys, pairs, counts)
+    if out.shape[1] != n_draws:
+        # e.g. "pool" emits the 2T-row union; the next round's valid-prefix
+        # counts would then silently keep only the first machine's half.
+        raise ValueError(
+            f"combiner {method!r} returned {out.shape[1]} rows per pair instead "
+            f"of n_draws={n_draws}; it cannot be used as a tree-reduction step"
+        )
+    return out
 
 
 def tree_combine(
@@ -56,7 +58,7 @@ def tree_combine(
     counts: Optional[jnp.ndarray] = None,
     method: str = "nonparametric",
     rescale: bool = False,
-) -> cmb.CombineResult:
+) -> CombineResult:
     """Combine ``(M, T, d)`` subposterior samples pairwise until one set remains.
 
     Odd set counts pass the last set through unchanged (paper §3.2). Output has
@@ -99,4 +101,4 @@ def tree_combine(
         # Final level came from a passthrough with T != n_draws: resample rows.
         idx = jnp.arange(n_draws) % out.shape[0]
         out = out[idx]
-    return cmb.CombineResult(samples=out, acceptance_rate=jnp.ones(()), moments=None)
+    return CombineResult(samples=out, acceptance_rate=jnp.ones(()), moments=None)

@@ -25,7 +25,9 @@ Combination (§3) communicates once at the end:
 - parametric, full θ (BvM regime): per-chain diagonal running moments →
   ``product_moments_diag`` over the chain axis — a single O(d) reduce.
 - exact combiners (nonparametric/semiparametric IMG): run on a designated
-  low-dim parameter *subset* (or summary) — all-gather of (M, T, d_sub).
+  low-dim parameter *subset* (or summary) — all-gather of (M, T, d_sub),
+  then :func:`combine_gathered` resolves the strategy by registry name
+  (``repro.core.combiners``).
 """
 
 from __future__ import annotations
@@ -355,6 +357,27 @@ def combine_parametric_diag(state: EpmcmcState) -> GaussianMoments:
     return GaussianMoments(
         mean=jax.tree.unflatten(treedef, out_m), cov=jax.tree.unflatten(treedef, out_v)
     )
+
+
+def combine_gathered(
+    key: jax.Array,
+    samples: jnp.ndarray,  # (M, T, d_sub) all-gathered subset samples
+    n_draws: int,
+    *,
+    combiner: str = "nonparametric",
+    **options,
+):
+    """Final-stage exact combination of all-gathered subset samples.
+
+    The combiner is resolved by registry name (``repro.core.combiners``), so
+    the mesh run selects its combination strategy with the same string the
+    CLI and benchmarks use — e.g. ``combiner="semiparametric"`` or
+    ``combiner="nonparametric", n_batch=8, weight_eval="kernel"`` for the
+    batched Pallas-scored IMG chains.
+    """
+    from repro.core.combiners import get_combiner
+
+    return get_combiner(combiner)(key, samples, n_draws, **options)
 
 
 def gather_subset_samples(

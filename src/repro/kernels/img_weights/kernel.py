@@ -26,6 +26,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x names this TPUCompilerParams; newer releases renamed it
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _img_weights_kernel(theta_ref, h_ref, out_ref, acc_ref, *, n_dblocks: int, m: int, d: int):
     j = pl.program_id(1)  # d-block index (sequential accumulation axis)
@@ -71,7 +74,7 @@ def img_log_weights_kernel(
         out_specs=pl.BlockSpec((block_p,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((P,), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_p,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS_CLS(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

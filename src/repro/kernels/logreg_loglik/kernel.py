@@ -26,6 +26,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x names this TPUCompilerParams; newer releases renamed it
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _logreg_kernel(x_ref, y_ref, w_ref, beta_ref, loglik_ref, grad_ref, acc_l, acc_g, *, n_blocks: int):
     i = pl.program_id(0)
@@ -90,7 +93,7 @@ def logreg_loglik_grad_kernel(
             pltpu.VMEM((C,), jnp.float32),
             pltpu.VMEM((d, C), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS_CLS(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

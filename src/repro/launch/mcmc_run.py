@@ -24,7 +24,12 @@ from typing import Callable, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core import combine, metrics
+from repro.core import metrics
+from repro.core.combiners import (
+    available_combiners,
+    canonical_combiners,
+    get_combiner,
+)
 from repro.core.subposterior import make_subposterior_logpdf, partition_data
 from repro.models.bayes import gmm, logistic_regression as logreg, poisson_gamma
 from repro.samplers.base import run_chain
@@ -80,6 +85,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--n", type=int, default=0, help="dataset size (0 = paper's)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--groundtruth-samples", type=int, default=4000)
+    ap.add_argument(
+        "--combiner", default="all", choices=("all",) + available_combiners(),
+        help="combination strategy to score (default: every registered combiner)",
+    )
+    ap.add_argument(
+        "--img-batch", type=int, default=1,
+        help="independent vmapped IMG index-chains (n_batch) for the exact combiners",
+    )
     args = ap.parse_args(argv)
 
     spec = MODELS[args.model]
@@ -130,17 +143,13 @@ def main(argv=None) -> dict:
     def l2(s):
         return float(metrics.l2_distance(gt, s))
 
+    names = canonical_combiners() if args.combiner == "all" else [args.combiner]
     t0 = time.time()
-    results["parametric"] = l2(combine.parametric(kc, subsamps, T).samples)
-    results["nonparametric"] = l2(
-        combine.nonparametric_img(kc, subsamps, T, rescale=True).samples
-    )
-    results["semiparametric"] = l2(
-        combine.semiparametric_img(kc, subsamps, T, rescale=True).samples
-    )
-    results["subpostAvg"] = l2(combine.subpost_average(subsamps))
-    results["subpostPool"] = l2(combine.pool(subsamps))
-    results["consensus"] = l2(combine.consensus_weighted(subsamps))
+    for name in names:
+        res = get_combiner(name)(
+            kc, subsamps, T, rescale=True, n_batch=args.img_batch
+        )
+        results[name] = l2(res.samples)
     t_combine = time.time() - t0
 
     print(f"model={args.model} M={args.M} T={T} sampler={args.sampler} "

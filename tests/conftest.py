@@ -4,13 +4,17 @@ import os
 # placeholder devices, and it does so in its own process.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-import hypothesis
+try:
+    import hypothesis
+except ImportError:  # optional dev dependency — property tests skip without it
+    hypothesis = None
 
-hypothesis.settings.register_profile(
-    "repro",
-    max_examples=25,
-    deadline=None,
-    derandomize=True,
-    suppress_health_check=list(hypothesis.HealthCheck),
-)
-hypothesis.settings.load_profile("repro")
+if hypothesis is not None:
+    hypothesis.settings.register_profile(
+        "repro",
+        max_examples=25,
+        deadline=None,
+        derandomize=True,
+        suppress_health_check=list(hypothesis.HealthCheck),
+    )
+    hypothesis.settings.load_profile("repro")

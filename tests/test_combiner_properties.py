@@ -1,6 +1,10 @@
 """Hypothesis properties of the combiners themselves (machine symmetry,
 affine equivariance, ragged-count degeneracies)."""
 
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

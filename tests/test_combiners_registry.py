@@ -1,0 +1,237 @@
+"""Combiner engine v2: registry round-trips, batched IMG vs sequential,
+Pallas weight path vs the Eq. 3.5 oracle, and the compat shim surface."""
+
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import combine as shim
+from repro.core.combiners import (
+    CombineResult,
+    available_combiners,
+    canonical_combiners,
+    get_combiner,
+    log_weight_bruteforce,
+    ragged_gather,
+)
+from repro.kernels.img_weights import img_log_weights
+
+M, T, D = 2, 600, 2
+
+
+@pytest.fixture(scope="module")
+def two_gaussian_product():
+    """Exact subposterior samples from two Gaussians N(±μ, σ²I); their
+    density product is N(0, σ²/2 I) in closed form — the one setting where
+    every combiner's output distribution is checkable without MCMC error.
+    M=2 is also the paper's high-acceptance regime (each proposal perturbs
+    half the mixture component), keeping IMG autocorrelation low."""
+    key = jax.random.PRNGKey(0)
+    mus = jnp.stack([jnp.full((D,), -0.5), jnp.full((D,), 0.5)])  # (M, D)
+    sigma = 0.7
+    eps = jax.random.normal(key, (M, T, D))
+    samples = mus[:, None, :] + sigma * eps
+    prod_mean = mus.mean(0)
+    prod_std = sigma / jnp.sqrt(M)
+    return samples, prod_mean, prod_std
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_get_combiner_roundtrips_every_registered_name(two_gaussian_product):
+    samples, _, _ = two_gaussian_product
+    key = jax.random.PRNGKey(1)
+    for name in available_combiners():
+        fn = get_combiner(name)
+        res = fn(key, samples, 64, rescale=True)
+        assert isinstance(res, CombineResult), name
+        if name in ("pool", "subpostPool"):
+            # pool ignores n_draws: the baseline IS the full M·T union
+            assert res.samples.shape == (M * T, D), name
+        else:
+            assert res.samples.shape == (64, D), name
+        assert bool(jnp.all(jnp.isfinite(res.samples))), name
+
+
+def test_canonical_names_are_available_and_deduped():
+    names = canonical_combiners()
+    assert set(names) <= set(available_combiners())
+    assert len(set(get_combiner(n) for n in names)) == len(names)
+    for expect in ("parametric", "nonparametric", "semiparametric",
+                   "semiparametric_w", "subpost_average", "consensus", "pool"):
+        assert expect in names
+
+
+def test_unknown_combiner_raises_with_choices():
+    with pytest.raises(KeyError, match="nonparametric"):
+        get_combiner("no_such_combiner")
+
+
+def test_aliases_resolve_to_same_callable():
+    assert get_combiner("nonparametric") is get_combiner("nonparametric_img")
+    assert get_combiner("pool") is get_combiner("subpostPool")
+    assert get_combiner("subpost_average") is get_combiner("subpostAvg")
+
+
+# ---------------------------------------------------------------------------
+# batched IMG vs sequential
+# ---------------------------------------------------------------------------
+
+
+def _moments(draws):
+    return np.asarray(draws.mean(0)), np.asarray(draws.std(0))
+
+
+@pytest.mark.parametrize("mode", [
+    dict(n_batch=8),
+    dict(n_batch=8, weight_eval="kernel"),
+    dict(n_batch=1, weight_eval="kernel"),
+])
+def test_batched_img_matches_sequential_moments(two_gaussian_product, mode):
+    """n_batch > 1 (and the Pallas-scored vectorized sweep) must target the
+    same per-chain stationary distribution as the serial Algorithm 1."""
+    samples, prod_mean, prod_std = two_gaussian_product
+    n_draws = 3000
+    combiner = get_combiner("nonparametric")
+    seq = jax.jit(lambda k: combiner(k, samples, n_draws, rescale=True).samples)(
+        jax.random.PRNGKey(2)
+    )
+    bat = jax.jit(
+        lambda k: combiner(k, samples, n_draws, rescale=True, **mode).samples
+    )(jax.random.PRNGKey(3))
+    m_seq, s_seq = _moments(seq)
+    m_bat, s_bat = _moments(bat)
+    # IMG draws are autocorrelated, so both estimates carry MC wander; the
+    # tolerances below are ~3x the observed across-seed scatter at this size.
+    np.testing.assert_allclose(m_bat, m_seq, atol=0.25)
+    np.testing.assert_allclose(s_bat, s_seq, rtol=0.35)
+    # and both track the closed-form product
+    np.testing.assert_allclose(m_bat, np.asarray(prod_mean), atol=0.2)
+    np.testing.assert_allclose(m_seq, np.asarray(prod_mean), atol=0.2)
+    assert abs(float(s_bat.mean()) - float(prod_std)) < 0.5 * float(prod_std)
+
+
+def test_batched_img_emits_exactly_n_draws(two_gaussian_product):
+    samples, _, _ = two_gaussian_product
+    combiner = get_combiner("nonparametric")
+    # n_draws not divisible by n_batch: ceil-round then trim
+    res = combiner(jax.random.PRNGKey(4), samples, 1000, rescale=True, n_batch=7)
+    assert res.samples.shape == (1000, D)
+    assert res.extras is not None
+    assert int(res.extras["n_batch"]) == 7
+    assert res.extras["per_chain_acceptance"].shape == (7,)
+
+
+def test_semiparametric_batched_runs(two_gaussian_product):
+    samples, prod_mean, _ = two_gaussian_product
+    res = get_combiner("semiparametric")(
+        jax.random.PRNGKey(5), samples, 512, rescale=True, n_batch=4
+    )
+    assert res.samples.shape == (512, D)
+    np.testing.assert_allclose(np.asarray(res.samples.mean(0)),
+                               np.asarray(prod_mean), atol=0.15)
+
+
+def test_kernel_path_rejects_full_semiparametric_weights(two_gaussian_product):
+    """W_t weights carry state the vectorized scalar recursion doesn't track."""
+    samples, _, _ = two_gaussian_product
+    with pytest.raises(ValueError, match="w_t"):
+        get_combiner("semiparametric")(
+            jax.random.PRNGKey(6), samples, 64, weight_eval="kernel"
+        )
+
+
+def test_kernel_sweep_decisions_match_bruteforce_replay():
+    """The vectorized sweep's rank-one weight correction must be *exact*:
+    replay its RNG and re-run the accept/reject recursion with brute-force
+    Eq. 3.5 weight recomputation — every decision must agree."""
+    from repro.core.combiners.api import counts_or_full
+    from repro.core.combiners.img import _img_kernel_sweep, _init_img_carry
+
+    key = jax.random.PRNGKey(42)
+    m_, t_, d_, b_ = 5, 40, 3, 3
+    samples = jax.random.normal(key, (m_, t_, d_))
+    counts = counts_or_full(samples, None)
+    keys = jax.random.split(jax.random.PRNGKey(7), b_)
+    carry = jax.vmap(lambda k: _init_img_carry(k, samples, counts, None))(keys)
+    h = jnp.asarray(0.8)
+    out = _img_kernel_sweep(carry, samples, counts, h)
+
+    k3 = jax.vmap(lambda k: jax.random.split(k, 3))(carry.key)
+    c = np.asarray(jax.vmap(lambda k: jax.random.randint(k, (m_,), 0, counts))(k3[:, 1]))
+    u = np.asarray(jax.vmap(lambda k: jax.random.uniform(k, (m_,)))(k3[:, 2]))
+
+    sam = np.asarray(samples)
+    for b in range(b_):
+        sel = np.asarray(carry.theta_sel[b]).copy()
+        tix = np.asarray(carry.t_idx[b]).copy()
+        nacc = 0
+        for m in range(m_):
+            prop = sel.copy()
+            prop[m] = sam[m, c[b, m]]
+            lw_p = float(log_weight_bruteforce(jnp.asarray(prop), h))
+            lw_c = float(log_weight_bruteforce(jnp.asarray(sel), h))
+            if np.log(u[b, m]) < lw_p - lw_c:
+                sel, tix[m], nacc = prop, c[b, m], nacc + 1
+        np.testing.assert_array_equal(tix, np.asarray(out.t_idx[b]))
+        assert nacc == int(out.n_accept[b])
+        np.testing.assert_allclose(np.asarray(out.theta_sel[b]), sel, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(out.mean[b]), sel.mean(0), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(out.sumsq[b]), (sel**2).sum(), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pallas weight path vs Eq. 3.5 oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,m,d", [(8, 4, 3), (128, 8, 5), (300, 16, 64)])
+def test_img_weights_kernel_agrees_with_bruteforce(B, m, d):
+    theta = jax.random.normal(jax.random.PRNGKey(B + d), (B, m, d))
+    h = jnp.asarray(0.6)
+    got = img_log_weights(theta, h)
+    want = jax.vmap(lambda t: log_weight_bruteforce(t, h))(theta)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# helpers + shim surface
+# ---------------------------------------------------------------------------
+
+
+def test_tree_combine_rejects_non_reduction_combiners(two_gaussian_product):
+    """Registry dispatch must not let a fixed-output baseline (pool emits the
+    2T-row union) masquerade as a tree-reduction step — the old if/elif raised
+    for unknown methods; the registry path needs the equivalent guard."""
+    from repro.core.tree_combine import tree_combine
+
+    samples, _, _ = two_gaussian_product
+    with pytest.raises(ValueError, match="tree-reduction"):
+        tree_combine(jax.random.PRNGKey(0), samples, 64, method="pool")
+
+
+def test_ragged_gather_wraps_modulo_counts():
+    samples = jnp.arange(2 * 4 * 1, dtype=jnp.float32).reshape(2, 4, 1)
+    counts = jnp.asarray([4, 3], jnp.int32)
+    out = ragged_gather(samples, counts)
+    np.testing.assert_array_equal(np.asarray(out[0, :, 0]), [0, 1, 2, 3])
+    np.testing.assert_array_equal(np.asarray(out[1, :, 0]), [4, 5, 6, 4])
+
+
+def test_shim_exposes_historical_api_with_unchanged_signatures():
+    for name in ("parametric", "nonparametric_img", "semiparametric_img",
+                 "subpost_average", "consensus_weighted", "pool",
+                 "log_weight_bruteforce", "online_init", "online_update",
+                 "online_product", "CombineResult", "OnlineMoments"):
+        assert hasattr(shim, name), name
+    np_params = inspect.signature(shim.nonparametric_img).parameters
+    assert list(np_params) == ["key", "samples", "n_draws", "counts", "schedule", "rescale"]
+    sp_params = inspect.signature(shim.semiparametric_img).parameters
+    assert list(sp_params) == ["key", "samples", "n_draws", "counts", "schedule",
+                               "rescale", "nonparametric_weights"]

@@ -114,3 +114,19 @@ def test_assert_no_cross_chain_collectives_logic():
     bad_text = 'y = f32[2] all-reduce(%a), replica_groups={{0,2,4,6},{1,3,5,7}}, to_apply=%s\n'
     with pytest.raises(AssertionError):
         epmcmc.assert_no_cross_chain_collectives(bad_text, FakeMesh())
+
+
+def test_combine_gathered_resolves_by_registry_name():
+    """The mesh run's final stage picks its combiner with the same string
+    the CLI and benchmarks use."""
+    key = jax.random.PRNGKey(0)
+    samples = 0.3 * jax.random.normal(key, (4, 200, 3)) + 1.0
+    for name in ("parametric", "nonparametric", "consensus"):
+        res = epmcmc.combine_gathered(key, samples, 64, combiner=name, rescale=True)
+        assert res.samples.shape == (64, 3), name
+    res = epmcmc.combine_gathered(
+        key, samples, 64, combiner="nonparametric", n_batch=4, weight_eval="kernel"
+    )
+    assert res.samples.shape == (64, 3)
+    with pytest.raises(KeyError):
+        epmcmc.combine_gathered(key, samples, 64, combiner="bogus")

@@ -1,11 +1,9 @@
 """Hypothesis property tests on the Gaussian-product algebra (paper Eqs 3.1/3.2)."""
 
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given
+from _hypothesis_compat import given, hnp, st
 
 from repro.core.gaussian import (
     fit_moments,

@@ -1,11 +1,10 @@
 """L2 metric, bandwidth schedules, tree combiner, ESS — properties."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given
+from _hypothesis_compat import given, st
 
 from repro.core import bandwidth as bw
 from repro.core import combine, metrics

@@ -1,11 +1,10 @@
 """Eq 2.1 identities + partitioner properties (hypothesis)."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given
+from _hypothesis_compat import given, st
 
 from repro.core.subposterior import (
     make_minibatch_logpdf,
