@@ -15,7 +15,7 @@ from typing import List
 import jax
 
 from benchmarks.common import Row, block, timed
-from repro.core.combiners import get_combiner
+from repro.core.combiners import filter_options, get_combiner
 
 M, T, D = 8, 500, 10
 N_DRAWS = 1024
@@ -56,4 +56,20 @@ def run(full: bool = False) -> List[Row]:
     t_k = timed(lambda: block(fn_k(jax.random.PRNGKey(2), samples)), warmup=1, iters=3)
     rows.append(Row("combine", "kernel_B=16", "img_wall_time", t_k, "s",
                     "vectorized all-M-proposals sweep via Pallas img_weights"))
+
+    # The PR-2 exact families on the same workload — one-shot (rpt /
+    # importance_pool) vs annealed-Gibbs (weierstrass) vs the IMG chain above.
+    for name, note in (
+        ("weierstrass", "Gibbs refinement ensemble (n_chains=8 default)"),
+        ("rpt", "median-cut partition + per-leaf product mass"),
+        ("importance_pool", "pooled cloud reweighted by product/mixture KDEs"),
+    ):
+        cfn = get_combiner(name)
+        opts = filter_options(cfn, dict(rescale=True, n_batch=4))
+        fn_n = jax.jit(
+            lambda k, s, cfn=cfn, opts=opts: cfn(k, s, n_draws, **opts).samples
+        )
+        t_n = timed(lambda: block(fn_n(jax.random.PRNGKey(2), samples)),
+                    warmup=1, iters=3)
+        rows.append(Row("combine", name, "wall_time", t_n, "s", note))
     return rows

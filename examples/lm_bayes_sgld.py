@@ -65,11 +65,14 @@ step_fn = jax.jit(
 
 with tempfile.TemporaryDirectory() as ckdir:
     ck = Checkpointer(ckdir, keep=2)
+    subset_history = []  # per-step (C, d_sub) gathers for the exact combiners
     for step in range(args.steps):
         batch = {
             k: jnp.stack([s.batch(step)[k] for s in streams]) for k in ("tokens", "labels")
         }
         state, metrics = step_fn(state, batch)
+        if step >= args.burn_in:
+            subset_history.append(epmcmc.gather_subset_samples(state.params))
         if step % 10 == 0 or step == args.steps - 1:
             losses = metrics["loss_per_chain"]
             print(f"step {step:4d}  -log p_c(θ) per chain: "
@@ -90,6 +93,14 @@ mean_sd = jnp.sqrt(jnp.mean(jnp.concatenate([v.reshape(-1) for v in jax.tree.lea
 print(f"combined posterior over {total/1e6:.1f}M parameter dims; "
       f"mean posterior sd = {float(mean_sd):.2e}")
 
-# exact combiners on a low-dim subset (the final-norm vector)
-sub = epmcmc.gather_subset_samples(state.params)
-print(f"low-dim subset for exact combiners: {sub.shape} (per-chain final_norm)")
+# exact combiners on a low-dim subset (the final-norm vector): the per-step
+# (C, d_sub) gathers stack into the (M, T, d_sub) layout the registry's
+# combiners require (epmcmc.stack_subset_history; a lone snapshot would use
+# gather_subset_samples(..., history=True) instead)
+history = epmcmc.stack_subset_history(subset_history)
+print(f"low-dim subset history for exact combiners: {history.shape} "
+      "(per-chain final_norm)")
+res = epmcmc.combine_gathered(
+    jax.random.PRNGKey(7), history, 64, combiner="weierstrass", rescale=True
+)
+print(f"weierstrass-combined subset draws: {res.samples.shape}")

@@ -24,6 +24,18 @@ registry name               paper    procedure
                                      precision-weighted averaging
 ``pool``                    §8       "subpostPool" baseline: union of all subposterior
                                      samples (alias ``subpostPool``)
+``weierstrass``             related  Weierstrass refinement sampler (Wang & Dunson):
+                                     exact Gibbs over latent per-machine refinement
+                                     draws with the shared shrinking-h anneal
+                                     (alias ``weierstrass_refine``)
+``rpt``                     related  random-partition-tree pooling (Wang, Guo &
+                                     Dunson): median-cut partition of the pooled
+                                     cloud, per-leaf product of block densities
+                                     (alias ``random_partition_tree``)
+``importance_pool``         related  importance-weighted pooling: pooled draws
+                                     reweighted by Σ_m log p̂_m − log q̂ with
+                                     self-normalized (truncated) resampling
+                                     (alias ``importance_weighted_pool``)
 ==========================  =======  ==================================================
 
 The IMG combiners additionally accept ``n_batch`` (independent vmapped index
@@ -38,6 +50,18 @@ every consumer at once.
 Layout convention: subposterior samples are a dense array ``(M, T, d)``.
 Ragged sample counts (straggler chains — paper footnote 1) are supported via
 ``counts (M,)``: chain m's valid samples are rows ``[0, counts[m])``.
+The mesh gather in :func:`repro.distributed.epmcmc.gather_subset_samples`
+returns a single snapshot ``(C, d_sub)``; before it can feed a combiner it
+must gain the T axis — pass ``history=True`` there (T=1 adapter) or stack
+per-step snapshots with ``epmcmc.stack_subset_history`` → ``(C, T, d_sub)``.
+
+Option-forwarding convention: callers broadcasting one option dict to many
+combiners (the CLI's ``--combiner all`` loop, ``tree_combine``'s
+``rescale``, ``epmcmc.combine_gathered``) filter it per combiner signature
+with :func:`filter_options` — a combiner only sees options it declares.
+``**options`` (no underscore) in a signature marks a passthrough wrapper
+that receives everything; ``**_ignored`` marks tolerated-but-unused
+keywords, which :func:`filter_options` drops before the call.
 
 Bandwidth convention: the Gaussian kernel is ``N(θ | θ^m_{t_m}, h² I_d)``;
 the paper's §3.3 occasionally writes ``h`` where dimensional consistency
@@ -51,10 +75,12 @@ from repro.core.combiners.api import (  # noqa: F401
     available_combiners,
     canonical_combiners,
     counts_or_full,
+    filter_options,
     get_combiner,
     log_weight_bruteforce,
     ragged_gather,
     register,
+    resolve_schedule,
     valid_masks,
 )
 from repro.core.combiners.baselines import (  # noqa: F401
@@ -71,6 +97,11 @@ from repro.core.combiners.img import (  # noqa: F401
     semiparametric_model,
     semiparametric_w,
 )
+from repro.core.combiners.density import (  # noqa: F401
+    machine_kde_logpdfs,
+    masked_silverman,
+)
+from repro.core.combiners.importance_pool import importance_pool  # noqa: F401
 from repro.core.combiners.online import (  # noqa: F401
     OnlineMoments,
     online_init,
@@ -78,3 +109,5 @@ from repro.core.combiners.online import (  # noqa: F401
     online_update,
 )
 from repro.core.combiners.parametric import parametric  # noqa: F401
+from repro.core.combiners.rpt import rpt  # noqa: F401
+from repro.core.combiners.weierstrass import weierstrass  # noqa: F401

@@ -18,11 +18,13 @@ populates the registry with every built-in combiner.
 
 from __future__ import annotations
 
-from typing import Callable, Dict, NamedTuple, Optional, Protocol, Tuple
+import inspect
+from typing import Any, Callable, Dict, NamedTuple, Optional, Protocol, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import bandwidth as bw
 from repro.core.gaussian import GaussianMoments
 
 
@@ -90,6 +92,47 @@ def available_combiners() -> Tuple[str, ...]:
 def canonical_combiners() -> Tuple[str, ...]:
     """Primary registration names only (aliases dropped), sorted."""
     return tuple(sorted(_CANONICAL))
+
+
+def filter_options(combiner: Combiner, options: Dict[str, Any]) -> Dict[str, Any]:
+    """Keep only the ``options`` the combiner's signature declares.
+
+    The option-forwarding convention (see the package docstring): callers
+    that broadcast one option dict to *every* registered combiner (the CLI's
+    ``--combiner all`` loop, the tree reduction's ``rescale``) must filter it
+    per combiner signature instead of relying on catch-all kwargs to swallow
+    mismatches. Two catch-all spellings are distinguished:
+
+    - ``**options`` (no underscore) marks a *passthrough* wrapper that
+      forwards to an inner combiner (e.g. ``semiparametric_w``) — it receives
+      the full dict;
+    - ``**_ignored`` marks tolerated-but-unused keywords — unknown keys are
+      dropped here rather than silently swallowed there.
+    """
+    params = inspect.signature(combiner).parameters.values()
+    passthrough = any(
+        p.kind is inspect.Parameter.VAR_KEYWORD and not p.name.startswith("_")
+        for p in params
+    )
+    if passthrough:
+        return dict(options)
+    known = {p.name for p in params if p.kind is inspect.Parameter.KEYWORD_ONLY}
+    return {k: v for k, v in options.items() if k in known}
+
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def resolve_schedule(
+    samples: jnp.ndarray, schedule: Optional[Schedule], rescale: bool
+) -> Schedule:
+    """Default bandwidth schedule: Algorithm 1's anneal, optionally rescaled
+    by the pooled sample scale (shared by every annealing combiner)."""
+    if schedule is not None:
+        return schedule
+    d = samples.shape[-1]
+    scale = bw.pooled_scale(samples) if rescale else 1.0
+    return bw.annealed(d, scale=scale)
 
 
 # ---------------------------------------------------------------------------

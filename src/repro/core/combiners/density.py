@@ -1,0 +1,97 @@
+"""Shared subposterior-KDE evaluation for the sample-reweighting combiners.
+
+The Weierstrass refinement sampler and importance-weighted pooling both need
+``log p̂_m(θ)`` — each machine's Gaussian-KDE log density — evaluated at many
+query points. Two execution paths behind one helper:
+
+- ``counts is None`` (dense chains): one call per machine to the Pallas
+  :func:`repro.kernels.kde_density.kde_log_density` streaming kernel — the
+  TPU hot path (flash-style tiled logsumexp, no (Q, T) matrix in HBM).
+- ragged ``counts``: a chunked masked-logsumexp jnp path, because the valid
+  prefix of each chain is data-dependent and the kernel scores all centers.
+  This is also the path the pairwise tree reduction takes (it always carries
+  per-pair counts), which keeps the whole combiner vmap-able over pairs.
+
+Bandwidths come from :func:`masked_silverman` — Silverman's rule per machine
+over the valid prefix only, so straggler chains don't drag garbage rows into
+the scale estimate.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_LOG2PI = jnp.log(2.0 * jnp.pi)
+
+
+def masked_silverman(samples: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """Per-machine Silverman bandwidth over the valid prefix → ``(M,)``.
+
+    h_m = (4/(d+2))^{1/(d+4)} · T_m^{-1/(d+4)} · σ̄_m with σ̄_m the mean
+    marginal std of chain m's first ``counts[m]`` rows (unbiased normalizer).
+    """
+    M, T, d = samples.shape
+    # where (not mask-multiply): invalid rows may hold NaN garbage, and 0·NaN
+    # would leak it into the reduction.
+    mask = (jnp.arange(T)[None, :] < counts[:, None])[..., None]  # (M, T, 1)
+    n = jnp.maximum(counts.astype(samples.dtype), 1.0)
+    valid = jnp.where(mask, samples, 0.0)
+    mean = jnp.sum(valid, axis=1) / n[:, None]
+    var = jnp.sum(jnp.where(mask, samples - mean[:, None, :], 0.0) ** 2, axis=1)
+    var = var / jnp.maximum(n - 1.0, 1.0)[:, None]
+    sigma = jnp.mean(jnp.sqrt(var), axis=-1)
+    h = (4.0 / (d + 2.0)) ** (1.0 / (d + 4.0)) * n ** (-1.0 / (d + 4.0)) * sigma
+    # floor: a constant (or single-draw) chain has sigma 0, and h=0 would
+    # NaN-poison every downstream logit via 0/0 — a floored h makes its KDE
+    # an effective point mass instead
+    return jnp.maximum(h, 1e-8)
+
+
+def machine_kde_logpdfs(
+    queries: jnp.ndarray,  # (Q, d)
+    samples: jnp.ndarray,  # (M, T, d)
+    counts: Optional[jnp.ndarray],  # None ⇒ dense (Pallas kernel path)
+    h: jnp.ndarray,  # (M,) per-machine bandwidths
+    *,
+    chunk: int = 256,
+) -> jnp.ndarray:
+    """``log p̂_m(queries)`` for every machine → ``(M, Q)``.
+
+    ``Σ over axis 0`` of the result is the pooled product score Σ_m log p̂_m;
+    a counts-weighted logsumexp over axis 0 is the pooled-mixture proposal
+    density — the two quantities the reweighting combiners build on.
+    """
+    M, T, d = samples.shape
+    if counts is None:
+        from repro.kernels.kde_density import kde_log_density
+
+        return jnp.stack(
+            [kde_log_density(queries, samples[m], h[m]) for m in range(M)]
+        )
+
+    mask = jnp.arange(T)[None, :] < counts[:, None]  # (M, T) bool
+    csq = jnp.sum(samples**2, axis=-1)  # (M, T)
+    Q = queries.shape[0]
+    pad = (-Q) % chunk
+    qp = jnp.pad(queries, ((0, pad), (0, 0))).reshape(-1, chunk, d)
+
+    def block(qc):  # (chunk, d) → (M, chunk)
+        sq = (
+            jnp.sum(qc**2, axis=-1)[None, :, None]
+            + csq[:, None, :]
+            - 2.0 * jnp.einsum("qd,mtd->mqt", qc, samples)
+        )
+        logk = -0.5 * sq / (h[:, None, None] ** 2)
+        logk = jnp.where(mask[:, None, :], logk, -jnp.inf)
+        return jax.scipy.special.logsumexp(logk, axis=-1)
+
+    out = jax.lax.map(block, qp)  # (n_chunks, M, chunk)
+    lse = jnp.moveaxis(out, 0, 1).reshape(M, -1)[:, :Q]  # (M, Q)
+    log_norm = (
+        -jnp.log(jnp.maximum(counts.astype(queries.dtype), 1.0))
+        - 0.5 * d * (2.0 * jnp.log(h) + _LOG2PI)
+    )
+    return lse + log_norm[:, None]

@@ -24,7 +24,10 @@ Execution modes (:func:`run_img`):
     ``ceil(n_draws/B)`` sweeps from independently-initialized indices. Every
     chain is a bona-fide (shorter) run of Algorithm 1 — identical per-chain
     stationary distribution — so the serial O(n_draws·M) recursion becomes
-    ~B-way parallel work.
+    ~B-way parallel work. The bandwidth anneal uses a **shared global
+    index**: chain b's sweep i anneals at h(i·B + b + 1), exactly the index
+    the serial chain would use for that output row, so large B no longer
+    stalls every chain at the under-annealed h(n_draws/B) endpoint.
 
 ``weight_eval="kernel"``
     The vectorized all-M-proposals-per-sweep variant: each sweep draws index
@@ -55,11 +58,11 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import bandwidth as bw
 from repro.core.combiners.api import (
     CombineResult,
     counts_or_full,
     register,
+    resolve_schedule as _resolve_schedule,
     valid_masks,
 )
 from repro.core.gaussian import (
@@ -184,12 +187,20 @@ def _run_chain(
     n_sweeps: int,
     schedule: Schedule,
     model: ImgWeightModel,
+    anneal_offset: jnp.ndarray | int = 1,
+    anneal_stride: int = 1,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """One serial IMG chain: ``n_sweeps`` anneal steps, one draw per sweep."""
+    """One serial IMG chain: ``n_sweeps`` anneal steps, one draw per sweep.
+
+    Sweep i anneals at global index ``anneal_offset + i·anneal_stride``.
+    Batched runs pass offset b+1 / stride B so chain b's sweep i sits at the
+    exact index the serial chain would use for output row i·B+b — the shared
+    global anneal that keeps large-``n_batch`` runs as annealed as ``B=1``.
+    """
     carry = _init_img_carry(key, samples, counts, model.aux)
 
     def step(carry: _ImgCarry, i: jnp.ndarray):
-        h = schedule(i + 1).astype(samples.dtype)  # line 3 (1-based)
+        h = schedule(anneal_offset + i * anneal_stride).astype(samples.dtype)  # line 3 (1-based)
         extra_lw = model.extra_logweight(h) if model.extra_logweight is not None else None
         carry = _img_gibbs_sweep(carry, samples, counts, h, model.aux, extra_lw)
         key, k_draw = jax.random.split(carry.key)
@@ -310,7 +321,11 @@ def _run_batched_kernel(
     carry = jax.vmap(lambda k: _init_img_carry(k, samples, counts, None))(keys)
 
     def step(carry: _ImgCarry, i: jnp.ndarray):
-        h = schedule(i + 1).astype(samples.dtype)
+        # Shared global anneal index: sweep i covers serial rows (i·B, (i+1)·B];
+        # the kernel sweep scores all B chains at one scalar h, so use the
+        # block's most-annealed index — after n_sweeps the bandwidth matches
+        # the serial chain's h(n_draws) instead of stalling at h(n_draws/B).
+        h = schedule((i + 1) * n_batch).astype(samples.dtype)
         carry = _img_kernel_sweep(carry, samples, counts, h)
         split = jax.vmap(jax.random.split)(carry.key)  # (B, 2, 2)
         carry = carry._replace(key=split[:, 0])
@@ -366,9 +381,13 @@ def run_img(
             per_chain = (n_acc / (n_sweeps * M))[None]
         else:
             keys = jax.random.split(key, n_batch)
+            offsets = jnp.arange(1, n_batch + 1, dtype=jnp.float32)
             draws, n_acc = jax.vmap(
-                lambda k: _run_chain(k, samples, counts, n_sweeps, schedule, model)
-            )(keys)
+                lambda k, off: _run_chain(
+                    k, samples, counts, n_sweeps, schedule, model,
+                    anneal_offset=off, anneal_stride=n_batch,
+                )
+            )(keys, offsets)
             draws = jnp.swapaxes(draws, 0, 1).reshape(n_sweeps * n_batch, d)
             per_chain = n_acc / (n_sweeps * M)
             n_acc = jnp.sum(n_acc)
@@ -393,16 +412,6 @@ def run_img(
 # ---------------------------------------------------------------------------
 # weight models
 # ---------------------------------------------------------------------------
-
-
-def _resolve_schedule(
-    samples: jnp.ndarray, schedule: Optional[Schedule], rescale: bool
-) -> Schedule:
-    if schedule is not None:
-        return schedule
-    d = samples.shape[-1]
-    scale = bw.pooled_scale(samples) if rescale else 1.0
-    return bw.annealed(d, scale=scale)
 
 
 def nonparametric_model(samples: jnp.ndarray) -> ImgWeightModel:

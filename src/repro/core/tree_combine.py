@@ -22,7 +22,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.combiners import CombineResult, get_combiner
+from repro.core.combiners import CombineResult, filter_options, get_combiner
 
 
 def _combine_pairs(
@@ -34,9 +34,12 @@ def _combine_pairs(
     rescale: bool,
 ) -> jnp.ndarray:
     combiner = get_combiner(method)
+    # per-signature filtering: baselines without a bandwidth anneal simply
+    # don't receive ``rescale`` (option-forwarding convention, combiners pkg)
+    opts = filter_options(combiner, dict(rescale=rescale))
 
     def one(key, pair, cnt):
-        return combiner(key, pair, n_draws, counts=cnt, rescale=rescale).samples
+        return combiner(key, pair, n_draws, counts=cnt, **opts).samples
 
     keys = jax.random.split(key, pairs.shape[0])
     out = jax.vmap(one)(keys, pairs, counts)

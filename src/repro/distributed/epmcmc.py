@@ -373,19 +373,38 @@ def combine_gathered(
     the mesh run selects its combination strategy with the same string the
     CLI and benchmarks use — e.g. ``combiner="semiparametric"`` or
     ``combiner="nonparametric", n_batch=8, weight_eval="kernel"`` for the
-    batched Pallas-scored IMG chains.
-    """
-    from repro.core.combiners import get_combiner
+    batched Pallas-scored IMG chains. Options the chosen combiner's
+    signature does not declare are filtered out (the registry's
+    option-forwarding convention), so one option dict can drive a sweep over
+    rival combiners.
 
-    return get_combiner(combiner)(key, samples, n_draws, **options)
+    Shape contract: ``samples`` must be the dense ``(M, T, d_sub)`` stack —
+    a single :func:`gather_subset_samples` snapshot is ``(C, d_sub)`` and
+    needs ``history=True`` there (T=1) or :func:`stack_subset_history`
+    across steps first.
+    """
+    from repro.core.combiners import filter_options, get_combiner
+
+    if samples.ndim != 3:
+        raise ValueError(
+            f"combine_gathered needs (M, T, d_sub) samples, got {samples.shape}; "
+            "gather_subset_samples returns one (C, d_sub) snapshot — pass "
+            "history=True there or stack snapshots with stack_subset_history"
+        )
+    fn = get_combiner(combiner)
+    return fn(key, samples, n_draws, **filter_options(fn, options))
 
 
 def gather_subset_samples(
-    params: PyTree, paths: Sequence[str] | None = None
+    params: PyTree, paths: Sequence[str] | None = None, *, history: bool = False
 ) -> jnp.ndarray:
-    """Flatten a designated low-dim θ subset per chain → (C, d_sub), ready for
-    the exact (IMG) combiners. Default subset: final-norm scale (tiny, present
-    in every arch)."""
+    """Flatten a designated low-dim θ subset per chain → ``(C, d_sub)``.
+
+    Default subset: final-norm scale (tiny, present in every arch). The
+    exact (IMG) combiners require a ``(M, T, d_sub)`` history, not a single
+    snapshot — ``history=True`` returns ``(C, 1, d_sub)`` (the documented
+    ``samples[:, None, :]`` adapter), and per-step snapshots accumulate into
+    the full layout with :func:`stack_subset_history`."""
     flat, _ = jax.tree_util.tree_flatten_with_path(params)
     sel = []
     for path, leaf in flat:
@@ -398,7 +417,26 @@ def gather_subset_samples(
     if not sel:
         raise ValueError("subset selector matched no parameters")
     C = sel[0].shape[0]
-    return jnp.concatenate([s.reshape(C, -1).astype(jnp.float32) for s in sel], axis=1)
+    # jnp.array: force an owned buffer — with a single selected leaf the
+    # reshape/astype/concatenate chain can alias ``params``, and snapshots
+    # held across a donating step_fn (donate_argnums) would be deleted
+    # under the caller's feet
+    out = jnp.array(
+        jnp.concatenate([s.reshape(C, -1).astype(jnp.float32) for s in sel], axis=1)
+    )
+    return out[:, None, :] if history else out
+
+
+def stack_subset_history(snapshots: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Stack per-step ``(C, d_sub)`` subset gathers → ``(C, T, d_sub)``.
+
+    The bridge from the streaming sampler to the combiner engine's dense
+    layout: collect ``gather_subset_samples(state.params)`` every post-burn-in
+    step (host-side list is fine — d_sub is tiny by construction), stack, and
+    hand the result to :func:`combine_gathered`."""
+    if len(snapshots) == 0:
+        raise ValueError("stack_subset_history needs at least one snapshot")
+    return jnp.stack([jnp.asarray(s) for s in snapshots], axis=1)
 
 
 # ---------------------------------------------------------------------------

@@ -17,8 +17,8 @@ collectives.
 from __future__ import annotations
 
 import argparse
-import functools
 import time
+import zlib
 from typing import Callable, Dict
 
 import jax
@@ -28,6 +28,7 @@ from repro.core import metrics
 from repro.core.combiners import (
     available_combiners,
     canonical_combiners,
+    filter_options,
     get_combiner,
 )
 from repro.core.subposterior import make_subposterior_logpdf, partition_data
@@ -112,8 +113,11 @@ def main(argv=None) -> dict:
             spec["log_prior"], spec["log_lik"], shard, args.M
         )
         kern = make_kernel(args.sampler, logpdf, spec["step"])
+        # independent keys: reusing one key for the init perturbation AND the
+        # chain would correlate the starting point with the first transitions
+        k_init, k_run = jax.random.split(k)
         pos, info = run_chain(
-            k, kern, jnp.zeros(d) + 0.01 * jax.random.normal(k, (d,)),
+            k_run, kern, jnp.zeros(d) + 0.01 * jax.random.normal(k_init, (d,)),
             args.samples, burn_in=burn,
         )
         return pos, info.is_accepted.mean()
@@ -146,9 +150,13 @@ def main(argv=None) -> dict:
     names = canonical_combiners() if args.combiner == "all" else [args.combiner]
     t0 = time.time()
     for name in names:
-        res = get_combiner(name)(
-            kc, subsamps, T, rescale=True, n_batch=args.img_batch
-        )
+        fn = get_combiner(name)
+        # independent RNG per estimator (fold_in by a stable hash of the name
+        # — one shared key would correlate the scoreboard entries), and only
+        # the options each combiner's signature declares are forwarded
+        k_name = jax.random.fold_in(kc, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+        opts = filter_options(fn, dict(rescale=True, n_batch=args.img_batch))
+        res = fn(k_name, subsamps, T, **opts)
         results[name] = l2(res.samples)
     t_combine = time.time() - t0
 

@@ -1,0 +1,181 @@
+"""Registry-conformance suite: every registered combiner honors the uniform
+contract — exactly ``n_draws`` rows, ``counts`` masking, finite output —
+plus tree-reduction acceptance for the PR-2 families and the batched-IMG
+global-anneal regression guard. Plain pytest parameterization (no
+hypothesis) so the suite always runs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics
+from repro.core.combiners import (
+    CombineResult,
+    canonical_combiners,
+    filter_options,
+    get_combiner,
+)
+from repro.core.tree_combine import tree_combine
+
+M, T, D = 3, 120, 2
+
+# pool is the one documented exception to the exact-n_draws rule: the
+# baseline IS the full M·T union (see baselines.pool_combiner)
+FIXED_OUTPUT = {"pool"}
+
+
+@pytest.fixture(scope="module")
+def cloud():
+    """Well-separated machines so masking bugs shift the output visibly."""
+    key = jax.random.PRNGKey(0)
+    centers = jnp.linspace(-1.0, 1.0, M)[:, None, None] * jnp.ones((1, 1, D))
+    return centers + 0.5 * jax.random.normal(key, (M, T, D))
+
+
+@pytest.fixture(scope="module")
+def ragged(cloud):
+    """Ragged counts with large-but-finite garbage beyond every valid prefix.
+
+    (Finite, not NaN: mask-multiply implementations — fit_moments — are
+    NaN-poisoned by design; the contract only promises garbage rows are
+    never *selected*, which boundedness below detects.)
+    """
+    counts = jnp.asarray([T, 80, 50], jnp.int32)
+    garbage = cloud
+    for m, c in enumerate([T, 80, 50]):
+        garbage = garbage.at[m, c:].set(1e4)
+    return garbage, counts
+
+
+@pytest.mark.parametrize("name", canonical_combiners())
+@pytest.mark.parametrize("n_draws", [37, 64])
+def test_emits_exactly_n_draws(cloud, name, n_draws):
+    fn = get_combiner(name)
+    res = fn(jax.random.PRNGKey(1), cloud, n_draws)
+    assert isinstance(res, CombineResult), name
+    if name in FIXED_OUTPUT:
+        assert res.samples.shape == (M * T, D), name
+    else:
+        assert res.samples.shape == (n_draws, D), name
+    assert bool(jnp.all(jnp.isfinite(res.samples))), name
+
+
+@pytest.mark.parametrize("name", canonical_combiners())
+def test_counts_mask_excludes_garbage_rows(ragged, name):
+    """Rows beyond counts[m] hold 1e4 garbage — a combiner that honors the
+    mask can never emit (or average in) anything near them."""
+    garbage, counts = ragged
+    fn = get_combiner(name)
+    res = fn(jax.random.PRNGKey(2), garbage, 64, counts=counts)
+    assert bool(jnp.all(jnp.isfinite(res.samples))), name
+    assert float(jnp.max(jnp.abs(res.samples))) < 100.0, name
+
+
+@pytest.mark.parametrize("name", canonical_combiners())
+def test_ignores_unknown_options_after_filtering(cloud, name):
+    """The option-forwarding convention end-to-end: the CLI-style broadcast
+    dict filtered per signature must be accepted by every combiner.
+    (Passthrough wrappers — a bare ``**options`` — keep the full dict and
+    tolerate the unknowns themselves; everyone else has them filtered.)"""
+    import inspect
+
+    fn = get_combiner(name)
+    opts = filter_options(fn, dict(rescale=True, n_batch=2, no_such_option=1))
+    passthrough = any(
+        p.kind is inspect.Parameter.VAR_KEYWORD and not p.name.startswith("_")
+        for p in inspect.signature(fn).parameters.values()
+    )
+    if not passthrough:
+        assert "no_such_option" not in opts
+    res = fn(jax.random.PRNGKey(3), cloud, 16, **opts)
+    assert bool(jnp.all(jnp.isfinite(res.samples))), name
+
+
+@pytest.mark.parametrize("name", ["weierstrass", "rpt", "importance_pool"])
+def test_new_families_accepted_by_tree_combine(cloud, name):
+    """Exactly-n_draws output makes each new family a valid reduction step."""
+    res = tree_combine(jax.random.PRNGKey(4), cloud, 48, method=name)
+    assert res.samples.shape == (48, D)
+    assert bool(jnp.all(jnp.isfinite(res.samples)))
+
+
+def test_tree_combine_odd_m_keeps_counts_honest():
+    """Odd-M leftover path: the unpaired chain is modulo-padded to the round's
+    draw count (tree_combine.py leftover branch). Padding duplicates *valid*
+    draws only — with NaN planted beyond the leftover chain's counts, any
+    dishonest count would poison the final draws."""
+    key = jax.random.PRNGKey(5)
+    m, t, d = 3, 96, 2
+    samples = 0.4 * jax.random.normal(key, (m, t, d))
+    counts = jnp.asarray([t, t, 30], jnp.int32)
+    samples = samples.at[2, 30:].set(jnp.nan)  # invalid tail of the odd chain
+    res = tree_combine(jax.random.PRNGKey(6), samples, 40, counts=counts,
+                       method="nonparametric")
+    assert res.samples.shape == (40, d)
+    assert bool(jnp.all(jnp.isfinite(res.samples)))
+
+
+def test_tree_combine_odd_m_leftover_not_duplicated_into_counts():
+    """The modulo-padded leftover must keep counts = the original valid
+    length (not the padded T) so the next round's index proposals stay on
+    distinct draws: plant a sentinel at the first invalid row and check the
+    pad wraps to row 0 instead."""
+    from repro.core.tree_combine import tree_combine as tc
+
+    m, t, d = 3, 64, 1
+    base = jnp.zeros((m, t, d)) + jnp.arange(m)[:, None, None].astype(jnp.float32)
+    counts = jnp.asarray([t, t, 5], jnp.int32)
+    # chain 2 valid rows are exactly 2.0; everything after is the sentinel
+    base = base.at[2, 5:].set(1e4)
+    res = tc(jax.random.PRNGKey(7), base, 32, counts=counts, method="subpost_average")
+    assert float(jnp.max(jnp.abs(res.samples))) < 100.0
+
+
+def test_batched_img_anneal_matches_serial_l2():
+    """ROADMAP item: with the shared global anneal index, B=4 must not emit
+    under-annealed draws — its L2 to the closed-form product stays within
+    noise of the serial chain's on the bench-sized workload."""
+    key = jax.random.PRNGKey(8)
+    m, t, d = 8, 500, 10
+    sigma = 0.5
+    mus = 0.3 * jax.random.normal(key, (m, 1, d))
+    samples = mus + sigma * jax.random.normal(jax.random.fold_in(key, 1), (m, t, d))
+    # exact product of the m sampling Gaussians: N(mean(mu), sigma²/m I)
+    gt = jnp.mean(mus, axis=0) + (sigma / jnp.sqrt(m)) * jax.random.normal(
+        jax.random.fold_in(key, 2), (2000, d)
+    )
+    combiner = get_combiner("nonparametric")
+    l2 = {}
+    for b in (1, 4):
+        res = combiner(jax.random.PRNGKey(9), samples, 1024, rescale=True, n_batch=b)
+        l2[b] = float(metrics.l2_distance(gt, res.samples))
+        assert np.isfinite(l2[b])
+    assert l2[4] <= 1.35 * l2[1] + 1e-6, l2
+
+
+def test_batched_img_chains_share_global_anneal_index():
+    """Chain b's sweep i must anneal at index i·B + b + 1 — exactly the
+    serial chain's index for that output row. Probe by injecting a weight
+    model whose draw *is* the bandwidth and an identity schedule: the
+    interleaved output rows must read 1, 2, …, n_draws."""
+    from repro.core.combiners.api import counts_or_full
+    from repro.core.combiners.img import ImgWeightModel, run_img
+
+    m, t, d = 2, 40, 3
+    samples = 0.3 * jax.random.normal(jax.random.PRNGKey(10), (m, t, d))
+    probe = ImgWeightModel(
+        aux=None,
+        extra_logweight=None,
+        draw=lambda k, mean, h: jnp.full((d,), h),
+        moments=None,
+    )
+    res = run_img(
+        jax.random.PRNGKey(11), samples, 8, probe,
+        counts=counts_or_full(samples, None),
+        schedule=lambda i: jnp.asarray(i, jnp.float32),
+        n_batch=4,
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.samples[:, 0]), np.arange(1, 9, dtype=np.float32)
+    )

@@ -94,6 +94,45 @@ def test_gather_subset_samples(state0):
     assert sub.shape == (C, CFG.d_model)  # final_norm scale
     sub2 = epmcmc.gather_subset_samples(state0.params, paths=["final_norm", "embed"])
     assert sub2.shape == (C, CFG.d_model + CFG.vocab_size * CFG.d_model)
+    # the documented combiner adapter: history=True adds the T axis
+    sub3 = epmcmc.gather_subset_samples(state0.params, history=True)
+    assert sub3.shape == (C, 1, CFG.d_model)
+    np.testing.assert_array_equal(np.asarray(sub3[:, 0]), np.asarray(sub))
+
+
+def test_gather_history_feeds_combine_gathered_end_to_end(state0):
+    """The shape-contract bridge: per-step (C, d_sub) gathers → stacked
+    (C, T, d_sub) history → exact combiner via the registry — the mesh
+    pipeline's final stage, end to end."""
+    step = jax.jit(functools.partial(
+        epmcmc.epmcmc_step, cfg=CFG, num_shards=C, shard_tokens=1e4,
+        step_size=1e-4,
+    ))
+    state, snapshots = state0, []
+    for t in range(5):
+        state, _ = step(state, _batch(jax.random.PRNGKey(3), t))
+        snapshots.append(epmcmc.gather_subset_samples(state.params))
+    history = epmcmc.stack_subset_history(snapshots)
+    assert history.shape == (C, 5, CFG.d_model)
+    res = epmcmc.combine_gathered(
+        jax.random.PRNGKey(4), history, 16, combiner="nonparametric", rescale=True
+    )
+    assert res.samples.shape == (16, CFG.d_model)
+    assert bool(jnp.all(jnp.isfinite(res.samples)))
+    # a single snapshot goes through via the history=True adapter too
+    one = epmcmc.gather_subset_samples(state.params, history=True)
+    res1 = epmcmc.combine_gathered(jax.random.PRNGKey(5), one, 8, combiner="parametric")
+    assert res1.samples.shape == (8, CFG.d_model)
+
+
+def test_combine_gathered_rejects_snapshot_without_history_axis(state0):
+    """A raw (C, d_sub) snapshot must fail loudly with the adapter hint, not
+    be silently reinterpreted as (M, T, d)."""
+    snap = epmcmc.gather_subset_samples(state0.params)
+    with pytest.raises(ValueError, match="history"):
+        epmcmc.combine_gathered(jax.random.PRNGKey(6), snap, 8)
+    with pytest.raises(ValueError):
+        epmcmc.stack_subset_history([])
 
 
 def test_iota_replica_group_decoding():
