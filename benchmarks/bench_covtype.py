@@ -18,8 +18,9 @@ from benchmarks.common import Row, block
 from repro.core import combine
 from repro.core.subposterior import make_subposterior_logpdf, partition_data
 from repro.models.bayes import logistic_regression as logreg
-from repro.samplers.base import run_chain
-from repro.samplers.mala import mala_kernel
+from repro.samplers import get_sampler, run_chain
+
+mala_kernel = get_sampler("mala")
 
 M = 50
 

@@ -19,8 +19,8 @@ from repro.core import metrics
 from repro.core.combiners import get_combiner
 from repro.core.subposterior import make_subposterior_logpdf, partition_data
 from repro.models.bayes import gmm
+from repro.samplers import get_sampler
 from repro.samplers.base import MCMCKernel, run_chain
-from repro.samplers.rwmh import rwmh_kernel
 
 K = 4  # mixture components (paper uses 10; 4 keeps the CPU suite quick)
 N = 20_000
@@ -29,7 +29,7 @@ M = 10
 
 def _permute_kernel(logpdf, k, step):
     """RWMH + uniform label permutation before each proposal (paper §8.2)."""
-    base = rwmh_kernel(logpdf, step_size=step)
+    base = get_sampler("rwmh")(logpdf, step_size=step)
 
     def step_fn(key, state):
         k_perm, k_step = jax.random.split(key)

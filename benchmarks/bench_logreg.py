@@ -23,11 +23,13 @@ from benchmarks.common import Row, block
 from repro.core import metrics
 from repro.core.combiners import canonical_combiners, get_combiner, parametric, subpost_average
 from repro.core.subposterior import make_subposterior_logpdf, partition_data
-from repro.models.bayes import logistic_regression as logreg
-from repro.samplers.base import run_chain
-from repro.samplers.mala import mala_kernel
+from repro.models.bayes import get_model
+from repro.samplers import get_sampler, run_chain
 
 N, D = 50_000, 50
+
+logreg = get_model("logreg")
+_mala = get_sampler("mala")
 
 
 def _run_subposterior_chains(key, data, M, T, burn, init, step=0.06):
@@ -36,7 +38,7 @@ def _run_subposterior_chains(key, data, M, T, burn, init, step=0.06):
     def one(i, k):
         shard = jax.tree.map(lambda x: x[i], shards)
         logpdf = make_subposterior_logpdf(logreg.log_prior, logreg.log_lik, shard, M)
-        pos, info = run_chain(k, mala_kernel(logpdf, step_size=step), init, T, burn_in=burn)
+        pos, info = run_chain(k, _mala(logpdf, step_size=step), init, T, burn_in=burn)
         return pos, info.is_accepted.mean()
 
     keys = jax.random.split(key, M)
@@ -47,7 +49,7 @@ def _run_subposterior_chains(key, data, M, T, burn, init, step=0.06):
 def _run_full_chain(key, data, T, burn, init, step=0.018):
     logpdf = make_subposterior_logpdf(logreg.log_prior, logreg.log_lik, data, 1)
     pos, info = jax.jit(
-        lambda k: run_chain(k, mala_kernel(logpdf, step_size=step), init, T, burn_in=burn)
+        lambda k: run_chain(k, _mala(logpdf, step_size=step), init, T, burn_in=burn)
     )(key)
     return block(pos), float(info.is_accepted.mean())
 

@@ -16,9 +16,8 @@ import jax.numpy as jnp
 from benchmarks.common import Row, block
 from repro.core import combine, metrics
 from repro.core.subposterior import make_subposterior_logpdf, partition_data
-from repro.models.bayes import poisson_gamma as pg
-from repro.samplers.base import run_chain
-from repro.samplers.rwmh import rwmh_kernel
+from repro.models.bayes import get_model
+from repro.samplers import get_sampler, run_chain
 
 N, M = 50_000, 10
 
@@ -28,6 +27,8 @@ def run(full: bool = False) -> List[Row]:
     T = 3000 if full else 1500
     burn = T // 6
     key = jax.random.PRNGKey(0)
+    pg = get_model("poisson")
+    rwmh = get_sampler("rwmh")
     data, theta_true = pg.generate_data(key, N)
 
     shards = partition_data(data, M)
@@ -36,7 +37,7 @@ def run(full: bool = False) -> List[Row]:
         shard = jax.tree.map(lambda x: x[i], shards)
         logpdf = make_subposterior_logpdf(pg.log_prior, pg.log_lik, shard, M)
         pos, info = run_chain(
-            k, rwmh_kernel(logpdf, step_size=0.04), theta_true + 0.3, T, burn_in=burn
+            k, rwmh(logpdf, step_size=0.04), theta_true + 0.3, T, burn_in=burn
         )
         return pos, info.is_accepted.mean()
 
@@ -49,7 +50,7 @@ def run(full: bool = False) -> List[Row]:
     t0 = time.perf_counter()
     gt, info_gt = jax.jit(
         lambda k: run_chain(
-            k, rwmh_kernel(logpdf_full, step_size=0.012), theta_true, 3 * T, burn_in=T // 2
+            k, rwmh(logpdf_full, step_size=0.012), theta_true, 3 * T, burn_in=T // 2
         )
     )(jax.random.fold_in(key, 5))
     gt = block(gt)

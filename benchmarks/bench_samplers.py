@@ -1,0 +1,73 @@
+"""Sampling-stage throughput: every registered sampler, M ∈ {4, 10}.
+
+The paper's cost story is the *sampling* stage (the combine stage is measured
+by ``bench_combine``): M independent subposterior chains, zero communication.
+This bench times that stage — one ``make_shard_sampler`` chain group per
+registered sampler, vmapped over shards exactly as the ``mcmc_run`` pipeline's
+single-device backend runs it — seeding the sampling-side perf trajectory
+(``--json perf/`` through ``benchmarks.run``).
+
+Workload: hierarchical Poisson–gamma (paper §8.3) — the one model every
+sampler family covers (gradient kernels on the marginalized NB form, Gibbs on
+the conjugate latent-q form, SGLD on minibatches).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from benchmarks.common import Row, block, timed
+from repro.core.subposterior import partition_data
+from repro.launch.mcmc_run import make_shard_sampler
+from repro.models.bayes import get_model
+from repro.samplers import canonical_samplers
+
+N = 4_000  # divisible by both M values
+WARMUP = 100
+
+# fixed steps for the non-adaptive samplers (adaptive ones warm up from 0.1)
+_STEP = {"gibbs": 0.15, "sgld": 0.002}
+
+
+def run(full: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    T = 600 if full else 200
+    burn = T // 6
+    model = get_model("poisson")
+    key = jax.random.PRNGKey(0)
+    data, _ = model.generate_data(key, N)
+
+    for M in (4, 10):
+        shards, counts = partition_data(data, M, only=model.shard_keys, pad=True)
+        keys = jax.random.split(jax.random.fold_in(key, M), M)
+        for name in canonical_samplers():
+            one = make_shard_sampler(
+                model,
+                M,
+                name,
+                num_samples=T,
+                burn_in=burn,
+                warmup=WARMUP,
+                step_size=_STEP.get(name, 0.1),
+            )
+            fn = jax.jit(jax.vmap(one))
+            last = {}
+
+            def call():
+                last["out"] = block(fn(shards, counts, keys))
+                return last["out"]
+
+            t = timed(call, warmup=1, iters=3)
+            _theta, acc = last["out"]
+            rows.append(
+                Row("samplers", f"{name}_M={M}", "parallel_sampling_wall_time",
+                    t, "s",
+                    f"T={T} warmup={WARMUP} n={N} acc={float(acc.mean()):.2f}")
+            )
+            rows.append(
+                Row("samplers", f"{name}_M={M}", "draws_per_second",
+                    M * T / t, "draws/s")
+            )
+    return rows

@@ -28,6 +28,7 @@ BENCHES = [
     ("fig3_dims", "benchmarks.bench_dims"),
     ("fig4_gmm", "benchmarks.bench_gmm"),
     ("fig5_poisson", "benchmarks.bench_poisson"),
+    ("samplers", "benchmarks.bench_samplers"),
     ("combine", "benchmarks.bench_combine"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),

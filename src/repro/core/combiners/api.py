@@ -18,7 +18,6 @@ populates the registry with every built-in combiner.
 
 from __future__ import annotations
 
-import inspect
 from typing import Any, Callable, Dict, NamedTuple, Optional, Protocol, Tuple
 
 import jax
@@ -26,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.core import bandwidth as bw
 from repro.core.gaussian import GaussianMoments
+from repro.utils.options import filter_kwargs
 
 
 class CombineResult(NamedTuple):
@@ -108,16 +108,11 @@ def filter_options(combiner: Combiner, options: Dict[str, Any]) -> Dict[str, Any
       the full dict;
     - ``**_ignored`` marks tolerated-but-unused keywords — unknown keys are
       dropped here rather than silently swallowed there.
+
+    Shared with the sampler registry via
+    :func:`repro.utils.options.filter_kwargs`.
     """
-    params = inspect.signature(combiner).parameters.values()
-    passthrough = any(
-        p.kind is inspect.Parameter.VAR_KEYWORD and not p.name.startswith("_")
-        for p in params
-    )
-    if passthrough:
-        return dict(options)
-    known = {p.name for p in params if p.kind is inspect.Parameter.KEYWORD_ONLY}
-    return {k: v for k, v in options.items() if k in known}
+    return filter_kwargs(combiner, options)
 
 
 Schedule = Callable[[jnp.ndarray], jnp.ndarray]

@@ -33,33 +33,67 @@ def partition_data(
     shard_index: int | None = None,
     *,
     only: tuple[str, ...] | None = None,
+    pad: bool = False,
 ) -> PyTree:
     """Partition leading axis of every per-datum leaf into equal shards.
 
     The paper allows *arbitrary* partitions for i.i.d. data; we use contiguous
-    blocks (deterministic, reshard-friendly for elastic restarts). ``N`` must
-    be divisible by ``num_shards`` — the data pipeline pads otherwise.
+    blocks (deterministic, reshard-friendly for elastic restarts).
 
     ``only``: names of dict keys that hold per-datum arrays; other leaves
     (global quantities like mixture weights) are broadcast unchanged to every
     shard. ``None`` = every leaf is per-datum.
 
+    ``pad=False`` (default): ``N`` must be divisible by ``num_shards`` or a
+    ``ValueError`` is raised. ``pad=True``: non-divisible ``N`` is padded up
+    to ``M·ceil(N/M)`` rows by replicating the final datum, and the return
+    value becomes ``(shards, counts)`` where ``counts (M,) int32`` is each
+    shard's number of REAL rows — the same valid-prefix convention the
+    combiners' ``counts=`` masking uses, so the vector can flow through the
+    whole pipeline. Pass ``counts[m]`` as ``count=`` to
+    :func:`make_subposterior_logpdf`, which subtracts the padded rows'
+    (replicated-final-datum) likelihood exactly.
+
     Returns either shard ``shard_index`` or, if ``shard_index is None``, all
-    shards stacked on a new leading axis ``(M, N/M, ...)``.
+    shards stacked on a new leading axis ``(M, ceil(N/M), ...)``.
     """
 
     def _split(x):
         n = x.shape[0]
         if n % num_shards != 0:
-            raise ValueError(f"leading dim {n} not divisible by M={num_shards}")
-        shards = x.reshape((num_shards, n // num_shards) + x.shape[1:])
+            if not pad:
+                raise ValueError(
+                    f"leading dim {n} not divisible by M={num_shards} "
+                    "(pass pad=True for edge-padded shards + counts)"
+                )
+            size = -(-n // num_shards)  # ceil(N/M)
+            # edge padding: rows beyond N replicate the final datum (finite
+            # for every model; make_subposterior_logpdf's `count` correction
+            # removes their likelihood contribution exactly)
+            idx = jnp.minimum(jnp.arange(num_shards * size), n - 1)
+            x = x[idx]
+        else:
+            size = n // num_shards
+        shards = x.reshape((num_shards, size) + x.shape[1:])
         return shards if shard_index is None else shards[shard_index]
 
+    def _counts(n: int) -> jnp.ndarray:
+        size = -(-n // num_shards)
+        full = jnp.clip(n - jnp.arange(num_shards) * size, 0, size)
+        counts = full.astype(jnp.int32)
+        return counts if shard_index is None else counts[shard_index]
+
     if only is None:
-        return jax.tree.map(_split, data)
-    if not isinstance(data, dict):
-        raise TypeError("`only` requires dict data")
-    return {k: (_split(v) if k in only else v) for k, v in data.items()}
+        shards = jax.tree.map(_split, data)
+        n_lead = jax.tree.leaves(data)[0].shape[0]
+    else:
+        if not isinstance(data, dict):
+            raise TypeError("`only` requires dict data")
+        shards = {k: (_split(v) if k in only else v) for k, v in data.items()}
+        n_lead = data[only[0]].shape[0]
+    if not pad:
+        return shards
+    return shards, _counts(n_lead)
 
 
 def make_subposterior_logpdf(
@@ -67,18 +101,47 @@ def make_subposterior_logpdf(
     log_lik: Callable[[PyTree, PyTree], jnp.ndarray],
     data_shard: PyTree,
     num_shards: int,
+    *,
+    count: jnp.ndarray | int | None = None,
+    per_datum: tuple[str, ...] | None = None,
 ) -> LogDensityFn:
     """Build the shard-m subposterior log-density (paper Eq. 2.1).
 
     ``log_lik(theta, data_shard)`` must return the *summed* log-likelihood of
     the shard. The prior is raised to 1/M in log space. With ``num_shards=1``
     this is the ordinary full-data posterior (used for groundtruth chains).
+
+    ``count`` supports :func:`partition_data`'s ``pad=True`` shards: rows
+    ``[count, S)`` are replicas of the shard's final row, so the exact masked
+    log-likelihood is ``log_lik(shard) − (S − count)·log_lik(final row)``
+    (log_lik is a per-datum sum by the model contract). ``count`` may be a
+    traced scalar — the correction is O(1), vmap/shard_map friendly.
+    ``per_datum`` names the dict keys holding per-datum arrays (same meaning
+    as ``partition_data``'s ``only``; ``None`` = every leaf).
     """
 
     inv_m = 1.0 / float(num_shards)
 
+    if count is None:
+        def logpdf(theta: PyTree) -> jnp.ndarray:
+            return inv_m * log_prior(theta) + log_lik(theta, data_shard)
+
+        return logpdf
+
+    if per_datum is None:
+        last_row = jax.tree.map(lambda x: x[-1:], data_shard)
+        shard_size = jax.tree.leaves(data_shard)[0].shape[0]
+    else:
+        last_row = {
+            k: (v[-1:] if k in per_datum else v) for k, v in data_shard.items()
+        }
+        shard_size = data_shard[per_datum[0]].shape[0]
+    n_pad = jnp.asarray(shard_size, jnp.float32) - jnp.asarray(count, jnp.float32)
+
     def logpdf(theta: PyTree) -> jnp.ndarray:
-        return inv_m * log_prior(theta) + log_lik(theta, data_shard)
+        full = log_lik(theta, data_shard)
+        pad_ll = log_lik(theta, last_row)
+        return inv_m * log_prior(theta) + full - n_pad * pad_ll
 
     return logpdf
 

@@ -1,4 +1,4 @@
-"""Paper §8 experiment models.
+"""Paper §8 experiment models, behind the ``BayesModel`` registry.
 
 Every model exposes the same surface so the EP-MCMC driver is model-agnostic:
 
@@ -7,8 +7,21 @@ Every model exposes the same surface so the EP-MCMC driver is model-agnostic:
 - ``log_lik(theta, data) -> ()``       (summed over the data's leading axis)
 
 plus model-specific extras (closed-form posteriors, Gibbs blocks, predictive
-accuracy, label-permutation proposals).
+accuracy, label-permutation proposals). Importing this package registers every
+built-in model with :mod:`repro.models.bayes.registry`; consumers (the
+``mcmc_run`` pipeline, benchmarks) resolve them by name with
+:func:`get_model` — the same architecture as ``repro.core.combiners`` and
+``repro.samplers``.
 """
+
+from repro.models.bayes import registry as registry  # noqa: F401
+from repro.models.bayes.registry import (  # noqa: F401
+    BayesModel,
+    available_models,
+    canonical_models,
+    get_model,
+    register_model,
+)
 
 from repro.models.bayes import gmm as gmm  # noqa: F401
 from repro.models.bayes import linear_gaussian as linear_gaussian  # noqa: F401

@@ -18,6 +18,8 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.models.bayes import registry
+
 Data = Dict[str, jnp.ndarray]
 
 K_DEFAULT = 10
@@ -85,3 +87,19 @@ def single_mean_marginal(samples: jnp.ndarray, component: int = 0) -> jnp.ndarra
     """Extract the (T, 2) marginal of one mean component (Fig. 4's view)."""
     t = samples.shape[0]
     return samples.reshape(t, -1, DIM)[:, component, :]
+
+
+registry.register_model(
+    registry.BayesModel(
+        name="gmm",
+        generate_data=generate_data,
+        log_prior=log_prior,
+        log_lik=log_lik,
+        d=K_DEFAULT * DIM,
+        default_n=50_000,
+        default_sampler="rwmh",
+        # only x is per-datum; mixture weights / component_std broadcast to
+        # every shard (this retires the driver's old only=("x",) special-case)
+        shard_keys=("x",),
+    )
+)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gaussian import GaussianMoments
+from repro.models.bayes import registry
 
 Data = Dict[str, jnp.ndarray]
 
@@ -74,3 +75,17 @@ def subposterior_moments(
     mean = jax.scipy.linalg.cho_solve((chol, True), x.T @ y / noise_std**2)
     cov = jax.scipy.linalg.cho_solve((chol, True), jnp.eye(d))
     return GaussianMoments(mean=mean, cov=0.5 * (cov + cov.T))
+
+
+registry.register_model(
+    registry.BayesModel(
+        name="linear",
+        generate_data=generate_data,
+        log_prior=log_prior,
+        log_lik=log_lik,
+        d=10,
+        default_n=10_000,
+        default_sampler="mala",
+    ),
+    "linear_gaussian",
+)

@@ -17,6 +17,8 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.models.bayes import registry
+
 Data = Dict[str, jnp.ndarray]
 
 
@@ -82,3 +84,29 @@ def predictive_accuracy(
 
     probs = jax.lax.map(block, xp.reshape(-1, chunk, x.shape[1])).reshape(-1)[:n]
     return jnp.mean((probs > 0.5).astype(jnp.float32) == y)
+
+
+registry.register_model(
+    registry.BayesModel(
+        name="logreg",
+        generate_data=generate_data,
+        log_prior=log_prior,
+        log_lik=log_lik,
+        d=50,
+        default_n=50_000,
+        default_sampler="mala",
+    ),
+    "logistic_regression",
+)
+
+registry.register_model(
+    registry.BayesModel(
+        name="covtype",
+        generate_data=lambda key, n=581_012: generate_covtype_like(key, n),
+        log_prior=log_prior,
+        log_lik=log_lik,
+        d=54,
+        default_n=581_012,
+        default_sampler="mala",
+    )
+)

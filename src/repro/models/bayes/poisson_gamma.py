@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.special import gammaln
 
+from repro.models.bayes import registry
+
 Data = Dict[str, jnp.ndarray]
 
 # Hyperparameters (fixed, as the paper fixes λ, α, β before data generation).
@@ -131,3 +133,24 @@ def gibbs_init(key: jax.Array, data: Data) -> Dict[str, jnp.ndarray]:
     n = data["x"].shape[0]
     q0 = jnp.maximum(data["x"] / jnp.maximum(data["t"], 1e-6), 0.1)
     return {"theta": jnp.zeros((2,)), "q": q0}
+
+
+registry.register_model(
+    registry.BayesModel(
+        name="poisson",
+        generate_data=generate_data,
+        log_prior=log_prior,
+        log_lik=log_lik,
+        d=2,
+        default_n=50_000,
+        default_sampler="rwmh",
+        # criterion 3 (§8.3): conjugate latent-q Gibbs path — only (log a,
+        # log b) are shared across machines, the q_i stay shard-local
+        gibbs_blocks=lambda shard, num_shards, *, step_size=0.15: gibbs_blocks(
+            shard, num_shards, mh_step=step_size
+        ),
+        gibbs_init=gibbs_init,
+        gibbs_extract=lambda positions: positions["theta"],
+    ),
+    "poisson_gamma",
+)

@@ -1,0 +1,89 @@
+"""Step-size adaptation shared by every MH-style kernel.
+
+Dual averaging (Hoffman & Gelman 2011, Alg. 5 constants) drives the log step
+size toward a target acceptance rate; :func:`warmup_chain` wraps it into the
+registry-wide warmup phase: given a *kernel factory* ``step_size -> MCMCKernel``
+it runs ``num_steps`` adaptation transitions under ``lax.scan`` (jit-able, so
+it vmaps per chain and runs inside ``shard_map``) and returns the kernel built
+at the averaged step size plus the warmed-up position — the replacement for the
+hand-tuned per-model step constants.
+
+The HMC-specific two-phase scheme (dual averaging + Welford diagonal metric)
+stays in :mod:`repro.samplers.hmc` (``window_adaptation``); this module is the
+kernel-agnostic core both build on.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.samplers.base import MCMCKernel, PyTree
+
+KernelFactory = Callable[[jnp.ndarray], MCMCKernel]  # step_size -> kernel
+
+
+class DualAveragingState(NamedTuple):
+    log_eps: jnp.ndarray
+    log_eps_avg: jnp.ndarray
+    h_avg: jnp.ndarray
+    step: jnp.ndarray
+    mu: jnp.ndarray
+
+
+def da_init(initial_step_size: float) -> DualAveragingState:
+    log_eps = jnp.log(jnp.asarray(initial_step_size))
+    return DualAveragingState(
+        log_eps=log_eps,
+        log_eps_avg=jnp.zeros(()),
+        h_avg=jnp.zeros(()),
+        step=jnp.zeros(()),
+        mu=jnp.log(10.0) + log_eps,
+    )
+
+
+def da_update(
+    state: DualAveragingState, accept_prob: jnp.ndarray, target: float = 0.8
+) -> DualAveragingState:
+    """Nesterov dual averaging (Hoffman & Gelman 2011, Alg. 5 constants)."""
+    t0, gamma, kappa = 10.0, 0.05, 0.75
+    step = state.step + 1.0
+    eta_h = 1.0 / (step + t0)
+    h_avg = (1.0 - eta_h) * state.h_avg + eta_h * (target - accept_prob)
+    log_eps = state.mu - jnp.sqrt(step) / gamma * h_avg
+    eta_x = step ** (-kappa)
+    log_eps_avg = eta_x * log_eps + (1.0 - eta_x) * state.log_eps_avg
+    return DualAveragingState(log_eps, log_eps_avg, h_avg, step, state.mu)
+
+
+def warmup_chain(
+    key: jax.Array,
+    factory: KernelFactory,
+    position: PyTree,
+    num_steps: int,
+    *,
+    initial_step_size: float = 0.1,
+    target_accept: float = 0.8,
+) -> Tuple[MCMCKernel, PyTree, jnp.ndarray]:
+    """Dual-averaging warmup of a step-size-parameterized kernel.
+
+    The kernel is rebuilt inside the scan body at the current (traced) ε, so
+    the state layout must be ε-independent — true for every registered kernel
+    (states hold position/log-density/grad only). Returns ``(kernel, position,
+    step_size)`` with the kernel frozen at the averaged ε.
+    """
+    state0 = factory(jnp.asarray(initial_step_size)).init(position)
+
+    def body(carry, k):
+        state, da = carry
+        kern = factory(jnp.exp(da.log_eps))
+        state, info = kern.step(k, state)
+        da = da_update(da, info.accept_prob, target_accept)
+        return (state, da), info.accept_prob
+
+    keys = jax.random.split(key, num_steps)
+    (state, da), _ = jax.lax.scan(body, (state0, da_init(initial_step_size)), keys)
+    step_size = jnp.exp(da.log_eps_avg)
+    return factory(step_size), state.position, step_size

@@ -82,18 +82,49 @@ def tree_where(pred: jnp.ndarray, x: PyTree, y: PyTree) -> PyTree:
 
 def run_chain(
     key: jax.Array,
-    kernel: MCMCKernel,
+    kernel: "MCMCKernel | Callable[[jnp.ndarray], MCMCKernel]",
     position: PyTree,
     num_samples: int,
     *,
     burn_in: int = 0,
     thin: int = 1,
+    warmup: int = 0,
+    initial_step_size: float = 0.1,
+    target_accept: float = 0.8,
 ) -> Tuple[PyTree, StepInfo]:
     """Drive one chain; returns stacked positions ``(num_samples, ...)`` + info.
 
     Burn-in follows the paper's fixed rule (callers discard 1/6 by default at
     the experiment layer); ``thin`` keeps every thin-th post-burn-in draw.
+
+    ``kernel`` may instead be a *factory* ``step_size -> MCMCKernel`` (e.g. a
+    partial over a ``repro.samplers.registry`` entry). With ``warmup > 0`` the
+    factory is required: ``warmup`` dual-averaging transitions adapt the step
+    size toward ``target_accept`` starting from ``initial_step_size``
+    (per chain — the adaptation runs under the same ``lax.scan``/vmap nesting
+    as the chain itself), then sampling proceeds at the frozen adapted step.
+    Warmup transitions are discarded like burn-in.
     """
+    if warmup > 0:
+        # late import: adaptation imports this module for the kernel protocol
+        from repro.samplers import adaptation
+
+        if isinstance(kernel, MCMCKernel) or not callable(kernel):
+            raise TypeError(
+                "warmup needs a kernel factory (step_size -> MCMCKernel); "
+                "got a built kernel whose step size cannot be adapted"
+            )
+        key, k_warm = jax.random.split(key)
+        kernel, position, _eps = adaptation.warmup_chain(
+            k_warm,
+            kernel,
+            position,
+            warmup,
+            initial_step_size=initial_step_size,
+            target_accept=target_accept,
+        )
+    elif not isinstance(kernel, MCMCKernel) and callable(kernel):
+        kernel = kernel(jnp.asarray(initial_step_size))
     state = kernel.init(position)
 
     def one_step(state, key):
@@ -130,16 +161,33 @@ def run_chain(
 
 def run_chains(
     key: jax.Array,
-    kernel: MCMCKernel,
+    kernel: "MCMCKernel | Callable[[jnp.ndarray], MCMCKernel]",
     positions: PyTree,
     num_samples: int,
     *,
     burn_in: int = 0,
     thin: int = 1,
+    warmup: int = 0,
+    initial_step_size: float = 0.1,
+    target_accept: float = 0.8,
 ) -> Tuple[PyTree, StepInfo]:
-    """vmap of :func:`run_chain` over a leading chain axis of ``positions``."""
+    """vmap of :func:`run_chain` over a leading chain axis of ``positions``.
+
+    With ``warmup > 0`` (and ``kernel`` a step-size factory) every chain
+    adapts its own step size independently — no cross-chain communication.
+    """
     n_chains = jax.tree.leaves(positions)[0].shape[0]
     keys = jax.random.split(key, n_chains)
     return jax.vmap(
-        lambda k, p: run_chain(k, kernel, p, num_samples, burn_in=burn_in, thin=thin)
+        lambda k, p: run_chain(
+            k,
+            kernel,
+            p,
+            num_samples,
+            burn_in=burn_in,
+            thin=thin,
+            warmup=warmup,
+            initial_step_size=initial_step_size,
+            target_accept=target_accept,
+        )
     )(keys, positions)

@@ -110,41 +110,14 @@ def hmc_kernel(
 
 
 # ---------------------------------------------------------------------------
-# warmup: dual averaging + Welford diagonal metric
+# warmup: dual averaging (shared, repro.samplers.adaptation) + Welford metric
 # ---------------------------------------------------------------------------
 
-
-class DualAveragingState(NamedTuple):
-    log_eps: jnp.ndarray
-    log_eps_avg: jnp.ndarray
-    h_avg: jnp.ndarray
-    step: jnp.ndarray
-    mu: jnp.ndarray
-
-
-def da_init(initial_step_size: float) -> DualAveragingState:
-    log_eps = jnp.log(jnp.asarray(initial_step_size))
-    return DualAveragingState(
-        log_eps=log_eps,
-        log_eps_avg=jnp.zeros(()),
-        h_avg=jnp.zeros(()),
-        step=jnp.zeros(()),
-        mu=jnp.log(10.0) + log_eps,
-    )
-
-
-def da_update(
-    state: DualAveragingState, accept_prob: jnp.ndarray, target: float = 0.8
-) -> DualAveragingState:
-    """Nesterov dual averaging (Hoffman & Gelman 2011, Alg. 5 constants)."""
-    t0, gamma, kappa = 10.0, 0.05, 0.75
-    step = state.step + 1.0
-    eta_h = 1.0 / (step + t0)
-    h_avg = (1.0 - eta_h) * state.h_avg + eta_h * (target - accept_prob)
-    log_eps = state.mu - jnp.sqrt(step) / gamma * h_avg
-    eta_x = step ** (-kappa)
-    log_eps_avg = eta_x * log_eps + (1.0 - eta_x) * state.log_eps_avg
-    return DualAveragingState(log_eps, log_eps_avg, h_avg, step, state.mu)
+from repro.samplers.adaptation import (  # noqa: E402  (re-export for compat)
+    DualAveragingState,
+    da_init,
+    da_update,
+)
 
 
 def window_adaptation(

@@ -55,6 +55,53 @@ print(json.dumps({
 """
 
 
+_SAMPLER_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax, jax.numpy as jnp
+from repro.launch.mcmc_run import sample_subposteriors
+from repro.models.bayes import get_model
+
+model = get_model("poisson")
+key = jax.random.PRNGKey(0)
+data, _ = model.generate_data(key, 2000)
+res = sample_subposteriors(
+    jax.random.fold_in(key, 1), model, data, 4, 100,
+    sampler="gibbs", warmup=50, burn_in=20, step_size=0.15,
+)
+print(json.dumps({
+    "devices": jax.device_count(),
+    "backend": res.backend,
+    "collectives_checked": res.collectives_checked,
+    "theta_shape": list(res.theta.shape),
+    "finite": bool(jnp.all(jnp.isfinite(res.theta))),
+    "accept_one": bool(jnp.all(res.accept == 1.0)),  # Gibbs always accepts
+}))
+"""
+
+
+@pytest.mark.slow
+def test_sampling_stage_shard_maps_with_no_cross_chain_collectives():
+    """The mcmc_run sampling stage on a forced 4-device mesh: shard_map
+    backend, compiled-HLO collective check passes, chains produce finite
+    (M, T, d) θ — the tentpole's acceptance criterion, in CI."""
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    out = subprocess.run(
+        [sys.executable, "-c", _SAMPLER_SCRIPT], capture_output=True, text=True,
+        timeout=420, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["devices"] == 4
+    assert rec["backend"] == "shard_map(4 devices)"
+    assert rec["collectives_checked"] is not None  # HLO assert actually ran
+    assert rec["theta_shape"] == [4, 100, 2]
+    assert rec["finite"] is True
+    assert rec["accept_one"] is True
+
+
 @pytest.mark.slow
 def test_epmcmc_step_on_8_devices_executes_and_isolates():
     env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")

@@ -1,0 +1,146 @@
+"""Sampler-registry conformance: every registered sampler on one 2-d target.
+
+The registry's promise (criterion 3: any sampler per machine) is only real if
+every entry honours the uniform contract — this suite drives each canonical
+sampler against a known 2-d Gaussian posterior and checks:
+
+- ``accept_prob`` ∈ [0, 1] at every step,
+- fixed-seed determinism (bitwise-identical reruns),
+- post-warmup acceptance inside the spec's target band (adaptive samplers),
+- first/second moments within tolerance of the analytic posterior.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.samplers import (
+    available_samplers,
+    canonical_samplers,
+    filter_options,
+    get_sampler,
+    mh_within_gibbs_update,
+    run_chain,
+    sampler_spec,
+)
+
+MEAN = jnp.array([1.0, -2.0])
+STD = jnp.array([0.8, 1.4])
+
+
+def logpdf(theta):
+    return -0.5 * jnp.sum(((theta - MEAN) / STD) ** 2)
+
+
+def _gibbs_blocks(step_size=1.2):
+    """Per-coordinate MH-within-Gibbs blocks for the 2-d Gaussian target."""
+    blocks = []
+    for i in (0, 1):
+        blocks.append(
+            mh_within_gibbs_update(
+                logpdf,
+                select=lambda pos, i=i: pos[i],
+                replace=lambda pos, block, i=i: pos.at[i].set(block),
+                step_size=step_size,
+            )
+        )
+    return blocks
+
+
+def _build(name):
+    """Kernel + per-sampler options for the shared conformance target."""
+    factory = get_sampler(name)
+    options = {
+        "rwmh": dict(step_size=0.8),
+        "mala": dict(step_size=0.35),
+        "hmc": dict(step_size=0.25, num_integration_steps=8),
+        "gibbs": dict(block_updates=_gibbs_blocks()),
+        "sgld": dict(step_size=0.05),
+    }[name]
+    return factory(logpdf, **filter_options(factory, options))
+
+
+def test_registry_contains_the_paper_surface():
+    assert {"rwmh", "mala", "hmc", "gibbs", "sgld"} <= set(canonical_samplers())
+    assert set(canonical_samplers()) <= set(available_samplers())
+    with pytest.raises(KeyError, match="available"):
+        sampler_spec("nope")
+
+
+@pytest.mark.parametrize("name", sorted(canonical_samplers()))
+def test_conformance_moments_probabilities_determinism(name):
+    kern = _build(name)
+    run = jax.jit(
+        lambda k: run_chain(k, kern, jnp.zeros(2), 6000, burn_in=1500)
+    )
+    pos, info = run(jax.random.PRNGKey(0))
+
+    # accept_prob is a probability at every step
+    assert float(info.accept_prob.min()) >= 0.0
+    assert float(info.accept_prob.max()) <= 1.0
+    assert bool(jnp.all(jnp.isfinite(pos)))
+
+    # analytic posterior moments (MCSE-sized tolerances; SGLD adds a small
+    # discretization bias at ε=0.05)
+    np.testing.assert_allclose(pos.mean(0), MEAN, atol=0.25)
+    np.testing.assert_allclose(pos.std(0), STD, atol=0.3)
+
+    # fixed-seed determinism: an identical rerun is bitwise identical
+    pos2, _ = run(jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(pos), np.asarray(pos2))
+
+
+@pytest.mark.parametrize(
+    "name",
+    [n for n in sorted(canonical_samplers()) if sampler_spec(n).adaptive],
+)
+def test_warmup_reaches_target_acceptance_band(name):
+    """Dual-averaging warmup must land post-warmup acceptance near the spec's
+    target from a deliberately terrible initial step size."""
+    spec = sampler_spec(name)
+    factory = functools.partial(
+        lambda eps, f=spec.factory: f(logpdf, step_size=eps)
+    )
+    _, info = jax.jit(
+        lambda k: run_chain(
+            k,
+            factory,
+            jnp.zeros(2),
+            2000,
+            burn_in=200,
+            warmup=600,
+            initial_step_size=5.0,  # ~0 acceptance if left unadapted
+            target_accept=spec.target_accept,
+        )
+    )(jax.random.PRNGKey(1))
+    acc = float(info.accept_prob.mean())
+    assert abs(acc - spec.target_accept) < 0.15, (name, acc, spec.target_accept)
+
+
+def test_warmup_requires_a_factory():
+    kern = _build("rwmh")
+    with pytest.raises(TypeError, match="factory"):
+        run_chain(jax.random.PRNGKey(0), kern, jnp.zeros(2), 10, warmup=5)
+
+
+def test_gibbs_requires_block_updates():
+    with pytest.raises(ValueError, match="block_updates"):
+        get_sampler("gibbs")(logpdf)
+
+
+def test_factory_filter_options_drops_unknown_keys():
+    """One broadcast option dict must be safe for every registered factory."""
+    broadcast = dict(step_size=0.5, num_integration_steps=4, not_an_option=1)
+    for name in canonical_samplers():
+        factory = get_sampler(name)
+        opts = filter_options(factory, broadcast)
+        assert "not_an_option" not in opts
+        if name == "gibbs":
+            opts["block_updates"] = _gibbs_blocks()
+        kern = factory(logpdf, **opts)
+        state = kern.init(jnp.zeros(2))
+        _state, info = kern.step(jax.random.PRNGKey(0), state)
+        assert jnp.isfinite(info.accept_prob)

@@ -29,6 +29,82 @@ def test_partition_rejects_nondivisible():
         partition_data({"x": jnp.zeros((10, 2))}, 3)
 
 
+@given(st.integers(1, 8), st.integers(9, 40))
+def test_partition_pad_counts_and_edge_padding(m, n):
+    """pad=True: dense (M, ceil(N/M), ...) shards, valid-prefix counts summing
+    to N, padded rows replicating the final datum."""
+    data = {"x": jnp.arange(n, dtype=jnp.float32)[:, None] * jnp.ones((1, 3))}
+    shards, counts = partition_data(data, m, pad=True)
+    size = -(-n // m)
+    assert shards["x"].shape == (m, size, 3)
+    assert counts.shape == (m,) and counts.dtype == jnp.int32
+    assert int(counts.sum()) == n
+    flat = np.asarray(shards["x"][:, :, 0]).reshape(-1)
+    # real rows reproduce the data in order; padded rows replicate datum N-1
+    cts = np.asarray(counts)
+    got = np.concatenate([flat[i * size : i * size + cts[i]] for i in range(m)])
+    np.testing.assert_array_equal(got, np.arange(n))
+    for i in range(m):
+        np.testing.assert_array_equal(
+            flat[i * size + cts[i] : (i + 1) * size],
+            np.full(size - cts[i], n - 1, np.float32),
+        )
+
+
+@given(st.integers(2, 7), st.integers(0, 300))
+def test_padded_subposteriors_still_sum_to_posterior(m, seed):
+    """The Eq 2.1 identity must survive padding: the `count` correction in
+    make_subposterior_logpdf removes padded rows' likelihood exactly."""
+    key = jax.random.PRNGKey(seed)
+    n = m * 5 + (seed % m)  # usually non-divisible
+    data = {"x": jax.random.normal(key, (n, 2))}
+    theta = jax.random.normal(jax.random.fold_in(key, 1), (2,))
+    log_prior = lambda th: -0.5 * jnp.sum(th**2)
+    log_lik = lambda th, d: -0.5 * jnp.sum((d["x"] - th) ** 2)
+
+    shards, counts = partition_data(data, m, pad=True)
+    total = sum(
+        make_subposterior_logpdf(
+            log_prior,
+            log_lik,
+            jax.tree.map(lambda x, i=i: x[i], shards),
+            m,
+            count=counts[i],
+        )(theta)
+        for i in range(m)
+    )
+    full = make_subposterior_logpdf(log_prior, log_lik, data, 1)(theta)
+    np.testing.assert_allclose(total, full, rtol=1e-5, atol=1e-4)
+
+
+def test_padded_subposterior_identity_fixed_case():
+    """Non-hypothesis twin of the property above (always runs): N=23, M=4."""
+    key = jax.random.PRNGKey(7)
+    data = {"x": jax.random.normal(key, (23, 2))}
+    theta = jnp.array([0.3, -0.7])
+    log_prior = lambda th: -0.5 * jnp.sum(th**2)
+    log_lik = lambda th, d: -0.5 * jnp.sum((d["x"] - th) ** 2)
+    shards, counts = partition_data(data, 4, pad=True)
+    np.testing.assert_array_equal(np.asarray(counts), [6, 6, 6, 5])
+    total = sum(
+        make_subposterior_logpdf(
+            log_prior, log_lik,
+            jax.tree.map(lambda x, i=i: x[i], shards), 4, count=counts[i],
+        )(theta)
+        for i in range(4)
+    )
+    full = make_subposterior_logpdf(log_prior, log_lik, data, 1)(theta)
+    np.testing.assert_allclose(total, full, rtol=1e-5)
+
+
+def test_pad_with_broadcast_leaves_only_keys():
+    data = {"x": jnp.arange(10.0)[:, None], "w": jnp.ones(3)}
+    shards, counts = partition_data(data, 3, only=("x",), pad=True)
+    assert shards["x"].shape == (3, 4, 1)
+    assert shards["w"].shape == (3,)  # broadcast, untouched
+    np.testing.assert_array_equal(np.asarray(counts), [4, 4, 2])
+
+
 @given(st.integers(1, 10), st.integers(0, 500))
 def test_subposteriors_sum_to_posterior_logpdf(m, seed):
     """Σ_m log p_m(θ) == log p(θ) + log p(x|θ) (both up to the same constant):
