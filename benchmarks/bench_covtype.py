@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, block
-from repro.core import combine
+from repro.core.combiners import get_combiner, parametric, subpost_average
 from repro.core.subposterior import make_subposterior_logpdf, partition_data
 from repro.models.bayes import logistic_regression as logreg
 from repro.samplers import get_sampler, run_chain
@@ -49,9 +49,9 @@ def run(full: bool = False) -> List[Row]:
     rows.append(Row("fig3_covtype", "sampling", "subposterior_time", t_sub, "s", f"M={M}"))
 
     for name, fn in {
-        "parametric": lambda k_: combine.parametric(k_, sub, T).samples,
-        "semiparametric": lambda k_: combine.semiparametric_img(k_, sub, T, rescale=True).samples,
-        "subpostAvg": lambda k_: combine.subpost_average(sub),
+        "parametric": lambda k_: parametric(k_, sub, T).samples,
+        "semiparametric": lambda k_: get_combiner("semiparametric")(k_, sub, T, rescale=True).samples,
+        "subpostAvg": lambda k_: subpost_average(sub),
     }.items():
         s = block(jax.jit(fn)(jax.random.PRNGKey(1)))
         acc = float(logreg.predictive_accuracy(s, test["x"], test["y"]))

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, block
-from repro.core import combine, metrics
+from repro.core import metrics
+from repro.core.combiners import get_combiner, parametric
 from repro.core.subposterior import make_subposterior_logpdf, partition_data
 from repro.models.bayes import logistic_regression as logreg
 from repro.samplers import get_sampler, run_chain
@@ -59,9 +60,9 @@ def run(full: bool = False) -> List[Row]:
 
         base = moment_err(ref) + 1e-12
         for name, fn in {
-            "parametric": lambda k_: combine.parametric(k_, sub, T).samples,
-            "nonparametric": lambda k_: combine.nonparametric_img(k_, sub, T, rescale=True).samples,
-            "semiparametric": lambda k_: combine.semiparametric_img(k_, sub, T, rescale=True).samples,
+            "parametric": lambda k_: parametric(k_, sub, T).samples,
+            "nonparametric": lambda k_: get_combiner("nonparametric")(k_, sub, T, rescale=True).samples,
+            "semiparametric": lambda k_: get_combiner("semiparametric")(k_, sub, T, rescale=True).samples,
         }.items():
             s = block(jax.jit(fn)(jax.random.PRNGKey(3)))
             rows.append(Row("fig3_dims", f"d={d}", f"rel_err_{name}", moment_err(s) / base,

@@ -1,0 +1,51 @@
+"""Scenario matrix through ``repro.api.run_matrix`` — the sweep workload.
+
+The ROADMAP's "as many scenarios as you can imagine" face: a 2×2×2 grid
+(poisson/linear × rwmh/gibbs × parametric/nonparametric) of declarative
+RunSpecs driven through the compile-cached matrix runner. Rows report the
+per-cell posterior error and, crucially, the compile accounting — 8 cells
+must lower at most one sampling executable per distinct signature (4 here),
+which is the quantity that decides whether big sweeps are affordable.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from typing import List
+
+from benchmarks.common import Row
+from repro.api import RunSpec, run_matrix
+
+MODELS = ("poisson", "linear")
+SAMPLERS = ("rwmh", "gibbs")
+COMBINERS = ("parametric", "nonparametric")
+
+
+def run(full: bool = False) -> List[Row]:
+    T = 600 if full else 200
+    specs = [
+        RunSpec(
+            model=m, sampler=s, combiner=c, M=4, T=T, warmup=200,
+            n=2000, groundtruth_T=2 * T, score_metric="logl2",
+        )
+        for m, s, c in itertools.product(MODELS, SAMPLERS, COMBINERS)
+    ]
+    t0 = time.perf_counter()
+    res = run_matrix(specs)
+    wall = time.perf_counter() - t0
+
+    rows = [
+        Row("matrix", f"{r['model']}/{r['sampler']}/{r['combiner']}",
+            "posterior_logl2", r["error"], "log_d2",
+            f"acc={r['accept']:.2f}")
+        for r in res.rows
+    ]
+    rows.append(Row("matrix", "sweep", "wall_time", wall, "s",
+                    f"{res.n_specs} cells"))
+    rows.append(Row("matrix", "sweep", "sampling_executables",
+                    res.n_executables, "count",
+                    f"{res.n_specs} cells share {res.n_executables} compiles"))
+    rows.append(Row("matrix", "sweep", "groundtruth_executables",
+                    res.n_groundtruth_executables, "count"))
+    return rows

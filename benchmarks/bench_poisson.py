@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, block
-from repro.core import combine, metrics
+from repro.core import metrics
+from repro.core.combiners import get_combiner, parametric, pool, subpost_average
 from repro.core.subposterior import make_subposterior_logpdf, partition_data
 from repro.models.bayes import get_model
 from repro.samplers import get_sampler, run_chain
@@ -62,18 +63,18 @@ def run(full: bool = False) -> List[Row]:
                     f"3x samples, acc={float(acc_gt):.2f}"))
 
     for name, fn in {
-        "parametric": lambda k_: combine.parametric(k_, sub, T).samples,
-        "nonparametric": lambda k_: combine.nonparametric_img(k_, sub, T, rescale=True).samples,
-        "semiparametric": lambda k_: combine.semiparametric_img(k_, sub, T, rescale=True).samples,
-        "subpostAvg": lambda k_: combine.subpost_average(sub),
-        "subpostPool": lambda k_: combine.pool(sub),
+        "parametric": lambda k_: parametric(k_, sub, T).samples,
+        "nonparametric": lambda k_: get_combiner("nonparametric")(k_, sub, T, rescale=True).samples,
+        "semiparametric": lambda k_: get_combiner("semiparametric")(k_, sub, T, rescale=True).samples,
+        "subpostAvg": lambda k_: subpost_average(sub),
+        "subpostPool": lambda k_: pool(sub),
     }.items():
         samples = block(jax.jit(fn)(jax.random.PRNGKey(3)))
         rows.append(Row("fig5_poisson", name, "posterior_l2",
                         float(metrics.l2_distance(gt, samples)), "d2"))
 
     # posterior-mean error in (log a, log b) against the long chain
-    para = combine.parametric(jax.random.PRNGKey(4), sub, T)
+    para = parametric(jax.random.PRNGKey(4), sub, T)
     rows.append(Row("fig5_poisson", "parametric", "mean_abs_err",
                     float(jnp.abs(para.samples.mean(0) - gt.mean(0)).max()), "logparam"))
     return rows

@@ -2,10 +2,11 @@
 
 The paper's cost story is the *sampling* stage (the combine stage is measured
 by ``bench_combine``): M independent subposterior chains, zero communication.
-This bench times that stage — one ``make_shard_sampler`` chain group per
-registered sampler, vmapped over shards exactly as the ``mcmc_run`` pipeline's
-single-device backend runs it — seeding the sampling-side perf trajectory
-(``--json perf/`` through ``benchmarks.run``).
+This bench times that stage through :mod:`repro.api` — each (sampler, M)
+cell is a declarative :class:`repro.api.RunSpec`, and the compiled program
+comes from the same per-signature executable cache ``run_matrix`` uses, so
+the numbers measure exactly what a matrix sweep pays per cell. Seeds the
+sampling-side perf trajectory (``--json perf/`` through ``benchmarks.run``).
 
 Workload: hierarchical Poisson–gamma (paper §8.3) — the one model every
 sampler family covers (gradient kernels on the marginalized NB form, Gibbs on
@@ -17,10 +18,13 @@ from __future__ import annotations
 from typing import List
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import Row, block, timed
+from repro.api import RunSpec
+from repro.api.matrix import ExecutableCache
+from repro.api.sampling import is_padded
 from repro.core.subposterior import partition_data
-from repro.launch.mcmc_run import make_shard_sampler
 from repro.models.bayes import get_model
 from repro.samplers import canonical_samplers
 
@@ -34,29 +38,27 @@ _STEP = {"gibbs": 0.15, "sgld": 0.002}
 def run(full: bool = False) -> List[Row]:
     rows: List[Row] = []
     T = 600 if full else 200
-    burn = T // 6
     model = get_model("poisson")
     key = jax.random.PRNGKey(0)
     data, _ = model.generate_data(key, N)
+    execs = ExecutableCache()
 
     for M in (4, 10):
         shards, counts = partition_data(data, M, only=model.shard_keys, pad=True)
         keys = jax.random.split(jax.random.fold_in(key, M), M)
         for name in canonical_samplers():
-            one = make_shard_sampler(
-                model,
-                M,
-                name,
-                num_samples=T,
-                burn_in=burn,
-                warmup=WARMUP,
-                step_size=_STEP.get(name, 0.1),
+            spec = RunSpec(
+                model="poisson", sampler=name, M=M, T=T,
+                warmup=WARMUP, burn_in=T // 6,
+                step_size=_STEP.get(name, 0.1), n=N,
             )
-            fn = jax.jit(jax.vmap(one))
+            padded = is_padded(model, shards, counts, name)
+            fn = execs.sample_fn(spec, model, padded)
+            step = jnp.float32(spec.step_size)
             last = {}
 
             def call():
-                last["out"] = block(fn(shards, counts, keys))
+                last["out"] = block(fn(shards, counts, keys, step))
                 return last["out"]
 
             t = timed(call, warmup=1, iters=3)

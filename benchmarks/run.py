@@ -29,6 +29,7 @@ BENCHES = [
     ("fig4_gmm", "benchmarks.bench_gmm"),
     ("fig5_poisson", "benchmarks.bench_poisson"),
     ("samplers", "benchmarks.bench_samplers"),
+    ("matrix", "benchmarks.bench_matrix"),
     ("combine", "benchmarks.bench_combine"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),

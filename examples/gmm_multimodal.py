@@ -10,7 +10,7 @@ while the nonparametric/semiparametric combiners keep them.
 import jax
 import jax.numpy as jnp
 
-from repro.core import combine
+from repro.core.combiners import get_combiner, parametric, pool, subpost_average
 from repro.core.subposterior import make_subposterior_logpdf, partition_data
 from repro.models.bayes import gmm
 from repro.samplers.base import MCMCKernel, run_chain
@@ -61,11 +61,11 @@ def describe(name, samples):
     print(f"{name:22s} modes covered: {modes}/{K}   occupancy={occupancy}")
 
 
-describe("groundtruth-ish pool", combine.pool(sub))
-res_np = jax.jit(lambda k: combine.nonparametric_img(k, sub, T, rescale=True))(key)
+describe("groundtruth-ish pool", pool(sub))
+res_np = jax.jit(lambda k: get_combiner("nonparametric")(k, sub, T, rescale=True))(key)
 describe("nonparametric (§3.2)", res_np.samples)
-res_sp = jax.jit(lambda k: combine.semiparametric_img(k, sub, T, rescale=True))(key)
+res_sp = jax.jit(lambda k: get_combiner("semiparametric")(k, sub, T, rescale=True))(key)
 describe("semiparametric (§3.3)", res_sp.samples)
-res_p = jax.jit(lambda k: combine.parametric(k, sub, T))(key)
+res_p = jax.jit(lambda k: parametric(k, sub, T))(key)
 describe("parametric (biased)", res_p.samples)
-describe("subpostAvg (biased)", combine.subpost_average(sub))
+describe("subpostAvg (biased)", subpost_average(sub))

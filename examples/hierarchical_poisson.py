@@ -10,7 +10,8 @@ combination stage neither knows nor cares.
 import jax
 import jax.numpy as jnp
 
-from repro.core import combine, metrics
+from repro.core import metrics
+from repro.core.combiners import get_combiner, parametric, subpost_average
 from repro.core.subposterior import make_subposterior_logpdf, partition_data
 from repro.models.bayes import poisson_gamma as pg
 from repro.samplers.base import run_chain
@@ -52,10 +53,10 @@ gt, _ = jax.jit(
 )(jax.random.fold_in(key, 9))
 
 for name, fn in {
-    "parametric": lambda k: combine.parametric(k, sub, T).samples,
-    "nonparametric": lambda k: combine.nonparametric_img(k, sub, T, rescale=True).samples,
-    "semiparametric": lambda k: combine.semiparametric_img(k, sub, T, rescale=True).samples,
-    "subpostAvg": lambda k: combine.subpost_average(sub),
+    "parametric": lambda k: parametric(k, sub, T).samples,
+    "nonparametric": lambda k: get_combiner("nonparametric")(k, sub, T, rescale=True).samples,
+    "semiparametric": lambda k: get_combiner("semiparametric")(k, sub, T, rescale=True).samples,
+    "subpostAvg": lambda k: subpost_average(sub),
 }.items():
     s = jax.jit(fn)(jax.random.PRNGKey(1))
     print(f"{name:15s} posterior mean = {s.mean(0)}  "

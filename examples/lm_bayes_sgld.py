@@ -21,8 +21,10 @@ import tempfile
 import jax
 import jax.numpy as jnp
 
+from repro.api import combine_draws
 from repro.checkpoint import Checkpointer, restore
 from repro.configs import get_config
+from repro.core.combiners import available_combiners
 from repro.data.tokens import TokenStream
 from repro.distributed import epmcmc
 from repro.models.lm.config import reduced
@@ -34,6 +36,10 @@ ap.add_argument("--batch", type=int, default=4)
 ap.add_argument("--seq", type=int, default=128)
 ap.add_argument("--burn-in", type=int, default=20)
 ap.add_argument("--full-width", action="store_true")
+ap.add_argument(
+    "--combiner", default="weierstrass", choices=available_combiners(),
+    help="registry name for the exact low-dim combination stage",
+)
 args = ap.parse_args()
 
 cfg = get_config("mamba2_130m")
@@ -96,11 +102,13 @@ print(f"combined posterior over {total/1e6:.1f}M parameter dims; "
 # exact combiners on a low-dim subset (the final-norm vector): the per-step
 # (C, d_sub) gathers stack into the (M, T, d_sub) layout the registry's
 # combiners require (epmcmc.stack_subset_history; a lone snapshot would use
-# gather_subset_samples(..., history=True) instead)
+# gather_subset_samples(..., history=True) instead). combine_draws is the
+# repro.api face of the same registry-name backend Pipeline.combine() uses —
+# any --combiner choice lands here with zero example changes.
 history = epmcmc.stack_subset_history(subset_history)
 print(f"low-dim subset history for exact combiners: {history.shape} "
       "(per-chain final_norm)")
-res = epmcmc.combine_gathered(
-    jax.random.PRNGKey(7), history, 64, combiner="weierstrass", rescale=True
+res = combine_draws(
+    jax.random.PRNGKey(7), history, 64, combiner=args.combiner, rescale=True
 )
-print(f"weierstrass-combined subset draws: {res.samples.shape}")
+print(f"{args.combiner}-combined subset draws: {res.samples.shape}")

@@ -1,60 +1,55 @@
-"""Quickstart: the whole paper in ~60 lines.
+"""Quickstart: the whole paper through ``repro.api`` in ~40 lines.
 
-Partition data onto M "machines", sample each subposterior independently
-(zero communication), combine with all three estimators, and check against
-the closed-form posterior of a linear-Gaussian model.
+One declarative :class:`RunSpec` names the scenario (model × sampler ×
+combiners × M); the staged :class:`Pipeline` runs the paper's dataflow —
+partition → sample (zero communication) → combine → score — with every
+stage's artifact inspectable on the way. The linear-Gaussian model has a
+closed-form posterior, so we can grade the combiners against the exact
+answer key, not just a long chain.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import combine
-from repro.core.subposterior import make_subposterior_logpdf, partition_data
+from repro.api import Pipeline, RunSpec
 from repro.models.bayes import linear_gaussian as lg
-from repro.samplers.base import run_chain
-from repro.samplers.rwmh import rwmh_kernel
 
-M, T, D, N = 8, 2000, 4, 4096
+# -- the scenario, as data ----------------------------------------------------
+spec = RunSpec(
+    model="linear",
+    sampler="rwmh",  # paper §2's example sampler; any registry name works
+    combiner=("parametric", "nonparametric", "semiparametric", "subpost_average"),
+    M=8,
+    T=2000,
+    n=4096,
+    warmup=300,
+    groundtruth_T=2000,
+    score_metric="logl2",  # the linear posterior is narrow: score in log space
+    seed=0,
+)
+print(f"spec {spec.spec_id}: {spec.to_json()}")
 
-key = jax.random.PRNGKey(0)
-data, theta_true = lg.generate_data(key, N, D)
-posterior = lg.posterior_moments(data)  # closed form — our exam answer key
-print(f"true posterior mean: {posterior.mean}")
+pipe = Pipeline(spec)
 
-# -- step 1: partition the data onto M machines -----------------------------
-shards = partition_data(data, M)
+# -- stage 1: partition onto M "machines" ------------------------------------
+sharded = pipe.partition()
+posterior = lg.posterior_moments(sharded.data)  # closed form — our answer key
+print(f"partitioned n={spec.n} rows into M={spec.M} shards "
+      f"(counts={sharded.counts.tolist()})")
+print(f"true posterior mean: {posterior.mean[:4]}...")
 
-# -- step 2: each machine samples its subposterior (Eq 2.1), independently --
-def sample_machine(m, k):
-    shard = jax.tree.map(lambda x: x[m], shards)
-    logpdf = make_subposterior_logpdf(lg.log_prior, lg.log_lik, shard, M)
-    samples, info = run_chain(
-        k, rwmh_kernel(logpdf, step_size=0.08), jnp.zeros(D), T, burn_in=T // 6
-    )
-    return samples, info.is_accepted.mean()
+# -- stage 2: each machine samples its subposterior (Eq 2.1), independently --
+draws = pipe.sample()
+print(f"sampled {spec.M} subposteriors in parallel: θ {draws.theta.shape}, "
+      f"mean acceptance {float(draws.accept.mean()):.2f}, backend={draws.backend}")
 
-keys = jax.random.split(jax.random.fold_in(key, 1), M)
-subposterior_samples, acc = jax.jit(jax.vmap(sample_machine))(jnp.arange(M), keys)
-print(f"sampled {M} subposteriors in parallel (mean acceptance {float(acc.mean()):.2f})")
-
-# -- step 3: combine (the only communicating stage) --------------------------
-for name, fn in {
-    "parametric     (§3.1)": lambda k: combine.parametric(k, subposterior_samples, T),
-    "nonparametric  (§3.2)": lambda k: combine.nonparametric_img(
-        k, subposterior_samples, T, rescale=True
-    ),
-    "semiparametric (§3.3)": lambda k: combine.semiparametric_img(
-        k, subposterior_samples, T, rescale=True
-    ),
-}.items():
-    result = jax.jit(fn)(jax.random.PRNGKey(2))
+# -- stage 3: combine (the only communicating stage) --------------------------
+for name, result in pipe.combine().items():
     err = float(jnp.linalg.norm(result.samples.mean(0) - posterior.mean))
-    print(f"{name}: |combined mean − true mean| = {err:.4f} "
+    print(f"{name:16s}: |combined mean − true mean| = {err:.4f} "
           f"(IMG acceptance {float(result.acceptance_rate):.2f})")
 
-# the wrong thing to do, for contrast (paper Fig 1):
-avg = combine.subpost_average(subposterior_samples)
-print(f"subpostAvg baseline:  |avg mean − true mean| = "
-      f"{float(jnp.linalg.norm(avg.mean(0) - posterior.mean)):.4f}")
+# -- stage 4: score against a full-data groundtruth chain ---------------------
+# (subpost_average is the paper's Fig-1 cautionary baseline — watch it lose)
+print(pipe.score().table())

@@ -6,6 +6,7 @@ Layers
 - ``repro.core``        the paper's contribution: subposteriors + combination
 - ``repro.samplers``    any-MCMC substrate (RWMH/MALA/HMC/NUTS/Gibbs/SGLD)
 - ``repro.models``      Bayesian experiment models + assigned LM architecture zoo
+- ``repro.api``         experiment layer: RunSpec / Pipeline / run_matrix
 - ``repro.distributed`` shard_map EP-MCMC runtime, sharding policies
 - ``repro.kernels``     Pallas TPU kernels for the numeric hot spots
 - ``repro.launch``      mesh / dryrun / train / serve / mcmc_run entry points

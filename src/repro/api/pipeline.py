@@ -1,0 +1,372 @@
+"""Staged, resumable execution of one :class:`RunSpec`.
+
+The paper's dataflow is fixed — **partition → sample → combine → score** —
+so the Pipeline exposes exactly those stages, each returning an explicit
+typed artifact that can be inspected, persisted, or fed onward:
+
+    ``partition() -> ShardedData``             (M shards + valid-row counts)
+    ``sample()    -> SubposteriorDraws``       ((M, T, d) θ + diagnostics)
+    ``combine()   -> dict[str, CombineResult]``(one per requested combiner)
+    ``score()     -> Scoreboard``              (error per combiner vs groundtruth)
+
+Stages are lazy and cached: each runs its predecessors on demand, so
+``Pipeline(spec).run()`` is the whole paper and ``pipe.sample()`` alone is
+just the embarrassingly parallel stage. RNG discipline is fixed by the spec
+seed (data from ``PRNGKey(seed)``, sampling from ``fold_in(key, 1)``,
+groundtruth ``fold_in(key, 2)``, one independent stream per combiner from
+``fold_in(key, 3)`` + a stable hash of the name), so the same spec always
+produces bitwise-identical artifacts.
+
+With ``checkpoint_dir`` set, the sampling stage runs the chunked driver of
+:mod:`repro.api.resumable`: every ``checkpoint_every`` draws the live kernel
+state is persisted via :mod:`repro.checkpoint`, and a new Pipeline pointed
+at the same directory resumes mid-chain instead of restarting.
+
+The combination stage dispatches through
+:func:`repro.distributed.epmcmc.combine_gathered` — the same registry-name
+backend the mesh EP-MCMC run uses — so scenario code and the distributed
+runtime share one combine path.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+import zlib
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.spec import RunSpec
+from repro.api.sampling import groundtruth_chain, sample_subposteriors
+from repro.core import metrics
+from repro.core.subposterior import partition_data
+from repro.core.combiners import CombineResult
+from repro.models.bayes import get_model
+from repro.samplers import sampler_spec
+
+PyTree = Any
+
+# models at or above this θ-dimension are scored in log space: raw
+# `l2_distance` enters the f32-overflow regime of the KDE normalizer there
+# (its own docstring's warning) and becomes hypersensitive to dispersion
+LOG_L2_DIM = 40
+
+
+def groundtruth_step_size(spec: RunSpec) -> float:
+    """Full-chain step compensation, shared by Pipeline and run_matrix.
+
+    The full posterior is ~√M narrower than a subposterior and its gradient
+    M× larger; warmup absorbs that for adaptive kernels, fixed-step ones
+    need the classic compensation (ε/M for Langevin time steps, ε/√M for
+    proposal scales).
+    """
+    sp = sampler_spec(spec.resolved_sampler())
+    if sp.name == "sgld":
+        return spec.step_size / spec.M
+    if not (sp.adaptive and spec.warmup > 0):
+        return spec.step_size / math.sqrt(spec.M)
+    return spec.step_size
+
+
+def combine_spec_draws(
+    spec: RunSpec,
+    base_key: jax.Array,
+    theta: jnp.ndarray,
+    names: Optional[Tuple[str, ...]] = None,
+) -> "Dict[str, CombineResult]":
+    """The combine stage for one spec, shared by Pipeline and run_matrix.
+
+    One independent RNG stream per estimator (``fold_in(base_key, 3)`` then
+    a fold by a stable hash of the name — one shared key would correlate the
+    scoreboard entries, and it also makes each combiner's result independent
+    of which subset ``names`` selects); options merge the spec's
+    ``combiner_options`` over the driver defaults and are filtered per
+    combiner signature by the ``combine_gathered`` backend.
+    """
+    # late import — epmcmc pulls the heavy LM stack
+    from repro.distributed.epmcmc import combine_gathered
+
+    kc = jax.random.fold_in(base_key, 3)
+    options = dict({"rescale": True, "n_batch": 1}, **dict(spec.combiner_options))
+    out: Dict[str, CombineResult] = {}
+    for name in names if names is not None else spec.combiner_names():
+        k_name = jax.random.fold_in(kc, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+        out[name] = combine_gathered(
+            k_name, theta, spec.T, combiner=name, **options
+        )
+    return out
+
+
+def resolve_metric(spec: RunSpec, d: int):
+    """``(distance_fn, label)`` for a spec: ``score_metric`` override or the
+    dimension rule above (narrow posteriors can force ``"logl2"`` explicitly
+    — e.g. the scenario-matrix CI cells on the linear exactness oracle)."""
+    use_log = spec.score_metric == "logl2" or (
+        spec.score_metric == "auto" and d >= LOG_L2_DIM
+    )
+    if use_log:
+        return metrics.log_l2_distance, "logL2"
+    return metrics.l2_distance, "L2"
+
+
+class ShardedData(NamedTuple):
+    """Partition-stage artifact: the paper's M "machines" worth of data."""
+
+    shards: PyTree  # per-datum leaves carry a leading (M, ...) chain axis
+    counts: jnp.ndarray  # (M,) real rows per shard (edge-pad convention)
+    data: PyTree  # the full dataset (groundtruth stage input)
+    theta_true: jnp.ndarray  # generating parameters (diagnostics only)
+
+
+class SubposteriorDraws(NamedTuple):
+    """Sampling-stage artifact: M independent subposterior chains."""
+
+    theta: jnp.ndarray  # (M, T, d) shared-θ draws
+    accept: jnp.ndarray  # (M,) mean acceptance per chain
+    counts: jnp.ndarray  # (M,)
+    backend: str  # "vmap" | "shard_map(...)" | "vmap[resumable]"
+    collectives_checked: Optional[int]
+    t_done: int  # draws collected so far (== T unless interrupted)
+    complete: bool
+
+
+class Scoreboard(NamedTuple):
+    """Score-stage artifact: the paper's error table for one scenario."""
+
+    spec_id: str
+    model: str
+    sampler: str
+    M: int
+    T: int
+    metric: str  # "L2" | "logL2"
+    errors: Dict[str, float]  # combiner name -> distance to groundtruth
+    accept: float
+    backend: str
+    collectives_checked: Optional[int]
+    timings: Dict[str, float]  # stage -> seconds
+
+    def table(self) -> str:
+        lines = [
+            f"model={self.model} M={self.M} T={self.T} sampler={self.sampler} "
+            f"acc={self.accept:.2f} backend={self.backend}"
+        ]
+        for name, err in sorted(self.errors.items(), key=lambda kv: kv[1]):
+            lines.append(f"  {self.metric}({name:15s}) = {err:.4f}")
+        return "\n".join(lines)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dict(self._asdict())
+
+
+class Pipeline:
+    """Run one :class:`RunSpec` stage by stage (see module docstring)."""
+
+    def __init__(
+        self,
+        spec: RunSpec,
+        *,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 0,
+        check_hlo: bool = True,
+    ):
+        self.spec = spec.validate()
+        self.checkpoint_dir = str(checkpoint_dir) if checkpoint_dir else None
+        if checkpoint_every > 0 and self.checkpoint_dir is None:
+            raise ValueError(
+                "checkpoint_every > 0 without a checkpoint_dir would "
+                "silently persist nothing — pass checkpoint_dir (or drop "
+                "the cadence)"
+            )
+        self.checkpoint_every = checkpoint_every
+        self.check_hlo = check_hlo
+        self.timings: Dict[str, float] = {}
+        self._model = get_model(spec.model)
+        self._key = jax.random.PRNGKey(spec.seed)
+        self._sharded: Optional[ShardedData] = None
+        self._draws: Optional[SubposteriorDraws] = None
+        self._groundtruth: Optional[jnp.ndarray] = None
+        self._combined: Optional[Dict[str, CombineResult]] = None
+        self._board: Optional[Scoreboard] = None
+
+    # -- stage 1: partition --------------------------------------------------
+
+    def partition(self) -> ShardedData:
+        if self._sharded is None:
+            model, spec = self._model, self.spec
+            data, theta_true = model.generate_data(self._key, spec.resolved_n())
+            shards, counts = partition_data(
+                data, spec.M, only=model.shard_keys, pad=True
+            )
+            self._sharded = ShardedData(shards, counts, data, theta_true)
+        return self._sharded
+
+    # -- stage 2: sample (embarrassingly parallel) ---------------------------
+
+    def sample(self, max_steps: Optional[int] = None) -> SubposteriorDraws:
+        """Run (or resume) the M subposterior chains.
+
+        ``max_steps`` bounds the draws collected *this call* (resumable mode
+        only) — the budgeted-sampling / preemption-simulation hook. A
+        partial artifact has ``complete=False``; calling ``sample()`` again
+        continues from the persisted kernel state.
+        """
+        if self._draws is not None and self._draws.complete:
+            return self._draws
+        spec = self.spec
+        sharded = self.partition()
+        t0 = time.time()
+        if self.checkpoint_dir is not None:
+            if spec.mesh_shape is not None:
+                raise ValueError(
+                    "checkpointed sampling runs the vmap backend only — a "
+                    f"spec with mesh_shape={spec.mesh_shape} would silently "
+                    "lose its shard_map/HLO-assert request; drop one of the two"
+                )
+            from repro.api.resumable import sample_subposteriors_resumable
+
+            rs = sample_subposteriors_resumable(
+                jax.random.fold_in(self._key, 1),
+                self._model,
+                sharded.data,
+                spec.M,
+                spec.T,
+                sampler=spec.sampler,
+                warmup=spec.warmup,
+                burn_in=spec.resolved_burn_in(),
+                step_size=spec.step_size,
+                sgld_batch=spec.sgld_batch,
+                sampler_options=spec.sampler_options,
+                checkpoint_dir=self.checkpoint_dir,
+                checkpoint_every=self.checkpoint_every,
+                spec_id=spec.spec_id,
+                max_steps=max_steps,
+                shards=sharded.shards,
+                counts=sharded.counts,
+            )
+            res, t_done, complete = rs.result, rs.t_done, rs.complete
+        else:
+            if max_steps is not None:
+                raise ValueError(
+                    "max_steps needs a checkpoint_dir: a partial sampling "
+                    "stage is only useful if it can be resumed"
+                )
+            res = sample_subposteriors(
+                jax.random.fold_in(self._key, 1),
+                self._model,
+                sharded.data,
+                spec.M,
+                spec.T,
+                sampler=spec.sampler,
+                warmup=spec.warmup,
+                burn_in=spec.resolved_burn_in(),
+                step_size=spec.step_size,
+                sgld_batch=spec.sgld_batch,
+                check_hlo=self.check_hlo,
+                mesh_shape=spec.mesh_shape,
+                sampler_options=spec.sampler_options,
+                shards=sharded.shards,
+                counts=sharded.counts,
+            )
+            t_done, complete = spec.T, True
+        self.timings["sample_s"] = self.timings.get("sample_s", 0.0) + (
+            time.time() - t0
+        )
+        self._draws = SubposteriorDraws(
+            res.theta, res.accept, res.counts, res.backend,
+            res.collectives_checked, t_done, complete,
+        )
+        return self._draws
+
+    # -- groundtruth: single full-data chain ---------------------------------
+
+    def groundtruth(self) -> jnp.ndarray:
+        """Long full-data chain at the compensated step size
+        (:func:`groundtruth_step_size`)."""
+        if self._groundtruth is None:
+            spec = self.spec
+            gt_step = groundtruth_step_size(spec)
+            t0 = time.time()
+            self._groundtruth = groundtruth_chain(
+                jax.random.fold_in(self._key, 2),
+                self._model,
+                self.partition().data,
+                spec.groundtruth_T,
+                sampler=spec.sampler,
+                warmup=spec.warmup,
+                burn_in=spec.groundtruth_T // 6,
+                step_size=gt_step,
+                sgld_batch=spec.sgld_batch,
+                sampler_options=spec.sampler_options,
+            )
+            self.timings["groundtruth_s"] = time.time() - t0
+        return self._groundtruth
+
+    # -- stage 3: combine (the only communicating stage) ---------------------
+
+    def combine(self) -> Dict[str, CombineResult]:
+        if self._combined is None:
+            spec = self.spec
+            draws = self.sample()
+            if not draws.complete:
+                raise RuntimeError(
+                    f"sampling stage incomplete ({draws.t_done}/{spec.T} "
+                    "draws) — call sample() until complete before combine()"
+                )
+            t0 = time.time()
+            self._combined = combine_spec_draws(spec, self._key, draws.theta)
+            self.timings["combine_s"] = time.time() - t0
+        return self._combined
+
+    # -- stage 4: score ------------------------------------------------------
+
+    def score(self) -> Scoreboard:
+        if self._board is None:
+            spec = self.spec
+            combined = self.combine()
+            gt = self.groundtruth()
+            # high-d runs score in log space (f32-overflow regime of raw L2)
+            dist, label = resolve_metric(spec, self._model.d)
+            errors = {
+                name: float(dist(gt, res.samples))
+                for name, res in combined.items()
+            }
+            draws = self._draws
+            self._board = Scoreboard(
+                spec_id=spec.spec_id,
+                model=spec.model,
+                sampler=spec.resolved_sampler(),
+                M=spec.M,
+                T=spec.T,
+                metric=label,
+                errors=errors,
+                accept=float(jnp.mean(draws.accept)),
+                backend=draws.backend,
+                collectives_checked=draws.collectives_checked,
+                timings=dict(self.timings),
+            )
+        return self._board
+
+    def run(self) -> Scoreboard:
+        """All four stages; equivalent to the historical ``mcmc_run`` body."""
+        return self.score()
+
+
+def combine_draws(
+    key: jax.Array,
+    samples: jnp.ndarray,
+    n_draws: int,
+    *,
+    combiner: str = "nonparametric",
+    **options,
+) -> CombineResult:
+    """Registry-dispatched combination of a dense ``(M, T, d)`` stack.
+
+    The programmatic face of the combine stage for callers that already
+    hold subposterior draws (e.g. the LM-scale example's low-dim subset
+    history) — same backend as ``Pipeline.combine()``.
+    """
+    from repro.distributed.epmcmc import combine_gathered
+
+    return combine_gathered(key, samples, n_draws, combiner=combiner, **options)

@@ -1,0 +1,204 @@
+"""Declarative run specification: one EP-MCMC scenario as a value.
+
+A :class:`RunSpec` names everything the paper's pipeline needs — model,
+sampler, combiner(s), the partition size M, chain length T, warmup, seed,
+mesh shape, and per-registry option dicts — and nothing about *how* to run
+it. Execution lives in :class:`repro.api.Pipeline` (staged, resumable) and
+:func:`repro.api.run_matrix` (compile-cached sweeps); a spec is just data:
+
+- **validated** against the three registries (models, samplers, combiners)
+  plus cross-cutting feasibility rules (a ``gibbs`` spec needs a model with a
+  Gibbs surface);
+- **hashable and pytree-registered** (all-static, leafless) so specs can key
+  caches, ride through ``jax.jit`` closures, and live in pytrees;
+- **serializable**: ``to_dict``/``from_dict`` and JSON round-trip, with a
+  canonical :attr:`spec_id` content hash naming checkpoints and result rows;
+- **groupable**: :meth:`executable_signature` is the tuple of
+  compile-relevant statics — two specs with equal signatures (e.g. differing
+  only in ``seed`` or ``step_size``) share one compiled sampling executable
+  in :func:`repro.api.run_matrix`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, Iterable, Mapping, Optional, Tuple, Union
+
+import jax
+
+Options = Union[Mapping[str, Any], Iterable[Tuple[str, Any]]]
+
+
+def _freeze_options(options: Options) -> Tuple[Tuple[str, Any], ...]:
+    """Canonicalize an option mapping to a sorted, hashable tuple of pairs."""
+    items = list(options.items()) if isinstance(options, Mapping) else list(options)
+    frozen = []
+    for k, v in sorted(items):
+        if isinstance(v, list):
+            v = tuple(v)
+        frozen.append((str(k), v))
+    return tuple(frozen)
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """One model × sampler × combiner × mesh scenario, as data.
+
+    Fields mirror the ``mcmc_run`` CLI flags; zero values mean "use the
+    registry/paper default" (``sampler=None`` → the model's
+    ``default_sampler``, ``burn_in=0`` → the paper's T/6 rule, ``n=0`` → the
+    model's ``default_n``). ``combiner`` may be ``"all"`` (every canonical
+    combiner), one registry name, or a tuple of names.
+    """
+
+    model: str
+    sampler: Optional[str] = None
+    combiner: Union[str, Tuple[str, ...]] = "all"
+    M: int = 10
+    T: int = 2000
+    warmup: int = 200
+    burn_in: int = 0
+    step_size: float = 0.1
+    sgld_batch: int = 256
+    n: int = 0
+    seed: int = 0
+    groundtruth_T: int = 4000
+    score_metric: str = "auto"  # "auto" (logL2 iff d >= 40) | "l2" | "logl2"
+    mesh_shape: Optional[Tuple[int, int]] = None
+    sampler_options: Tuple[Tuple[str, Any], ...] = ()
+    combiner_options: Tuple[Tuple[str, Any], ...] = ()
+
+    def __post_init__(self):
+        set_ = object.__setattr__
+        if isinstance(self.combiner, list):
+            set_(self, "combiner", tuple(self.combiner))
+        if self.mesh_shape is not None:
+            set_(self, "mesh_shape", tuple(int(x) for x in self.mesh_shape))
+        set_(self, "sampler_options", _freeze_options(self.sampler_options))
+        set_(self, "combiner_options", _freeze_options(self.combiner_options))
+        for field, lo in (("M", 1), ("T", 1), ("warmup", 0), ("burn_in", 0),
+                          ("n", 0), ("groundtruth_T", 1), ("sgld_batch", 0)):
+            if int(getattr(self, field)) < lo:
+                raise ValueError(f"RunSpec.{field} must be >= {lo}")
+        if not self.step_size > 0:
+            raise ValueError("RunSpec.step_size must be positive")
+        if self.score_metric not in ("auto", "l2", "logl2"):
+            raise ValueError(
+                f"RunSpec.score_metric must be auto|l2|logl2, got {self.score_metric!r}"
+            )
+
+    # -- registry resolution -------------------------------------------------
+
+    def resolved_sampler(self) -> str:
+        """Canonical sampler name (the model's default when ``sampler=None``)."""
+        from repro.models.bayes import get_model
+        from repro.samplers import sampler_spec
+
+        name = self.sampler or get_model(self.model).default_sampler
+        return sampler_spec(name).name
+
+    def resolved_n(self) -> int:
+        from repro.models.bayes import get_model
+
+        return self.n or get_model(self.model).default_n
+
+    def resolved_burn_in(self) -> int:
+        """Paper §8: discard the first 1/6 of the chain unless overridden."""
+        return self.burn_in or self.T // 6
+
+    def combiner_names(self) -> Tuple[str, ...]:
+        from repro.core.combiners import canonical_combiners
+
+        if self.combiner == "all":
+            return canonical_combiners()
+        if isinstance(self.combiner, str):
+            return (self.combiner,)
+        return tuple(self.combiner)
+
+    def validate(self) -> "RunSpec":
+        """Resolve every name against its registry; raise on any mismatch."""
+        from repro.core.combiners import get_combiner
+        from repro.models.bayes import get_model
+
+        model = get_model(self.model)
+        sampler = self.resolved_sampler()
+        if sampler == "gibbs" and not model.has_gibbs:
+            raise ValueError(
+                f"spec {self.spec_id}: model {self.model!r} supplies no Gibbs "
+                "blocks (BayesModel.gibbs_blocks) but sampler resolves to 'gibbs'"
+            )
+        for name in self.combiner_names():
+            get_combiner(name)
+        if self.mesh_shape is not None:
+            ndata = self.mesh_shape[0]
+            if ndata < 1 or self.M % ndata != 0:
+                raise ValueError(
+                    f"spec {self.spec_id}: mesh data axis {ndata} must divide M={self.M}"
+                )
+        return self
+
+    # -- serialization -------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["sampler_options"] = dict(self.sampler_options)
+        d["combiner_options"] = dict(self.combiner_options)
+        if isinstance(self.combiner, tuple):
+            d["combiner"] = list(self.combiner)
+        if self.mesh_shape is not None:
+            d["mesh_shape"] = list(self.mesh_shape)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "RunSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown RunSpec fields: {sorted(unknown)}")
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "RunSpec":
+        return cls.from_dict(json.loads(s))
+
+    @property
+    def spec_id(self) -> str:
+        """Canonical content hash — stable across processes, sensitive to
+        every field (names checkpoints, result rows, compile groups)."""
+        return hashlib.sha256(self.to_json().encode()).hexdigest()[:12]
+
+    # -- compile grouping ----------------------------------------------------
+
+    def executable_signature(self) -> Tuple[Any, ...]:
+        """The statics that shape the compiled sampling program.
+
+        ``seed`` and ``step_size`` are runtime inputs (the RNG key and a
+        traced scalar), and the combiner list never enters the sampling
+        stage, so specs differing only there share one executable —
+        :func:`repro.api.run_matrix` keys its jit cache on this tuple.
+        """
+        return (
+            "sample", self.model, self.resolved_sampler(), self.M, self.T,
+            self.warmup, self.resolved_burn_in(), self.resolved_n(),
+            self.sgld_batch, self.mesh_shape, self.sampler_options,
+        )
+
+    def groundtruth_signature(self) -> Tuple[Any, ...]:
+        """Compile statics of the single full-data groundtruth chain."""
+        return (
+            "groundtruth", self.model, self.resolved_sampler(),
+            self.groundtruth_T, self.warmup, self.resolved_n(),
+            self.sgld_batch, self.sampler_options,
+        )
+
+
+# All-static pytree node (no leaves): a RunSpec can sit inside pytrees handed
+# to jax transforms and comes back unchanged.
+jax.tree_util.register_pytree_node(
+    RunSpec, lambda spec: ((), spec), lambda spec, _: spec
+)

@@ -1,37 +1,52 @@
-"""Backwards-compatibility shim over :mod:`repro.core.combiners`.
+"""DEPRECATED backwards-compatibility shim over :mod:`repro.core.combiners`.
 
 The 428-line monolith this module used to be was split into the registry-
-backed ``repro.core.combiners`` package (api / parametric / img / baselines /
-online). Every historical public name is re-exported here with its original
-signature; new code should resolve combiners through
-``repro.core.combiners.get_combiner(name)`` instead.
+backed ``repro.core.combiners`` package (PR 1); since the ``repro.api``
+experiment layer landed, combiners should be resolved by registry name
+(``repro.core.combiners.get_combiner``) or driven end-to-end through
+``repro.api`` (RunSpec / Pipeline / run_matrix).
+
+Every historical public name still resolves here — lazily, via module
+``__getattr__`` — to the *same object* the registry serves, so results are
+registry-identical; each access emits a ``DeprecationWarning`` naming the
+replacement (asserted by ``tests/test_deprecation.py``).
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.combiners import (  # noqa: F401
-    CombineResult,
-    OnlineMoments,
-    consensus_weighted,
-    log_weight_bruteforce,
-    online_init,
-    online_product,
-    online_update,
-    parametric,
-    pool,
-    subpost_average,
-)
-from repro.core.combiners import img as _img
-
 Schedule = Callable[[jnp.ndarray], jnp.ndarray]
 
+# names re-exported verbatim from the combiners package
+_FORWARDED = (
+    "CombineResult",
+    "OnlineMoments",
+    "consensus_weighted",
+    "log_weight_bruteforce",
+    "online_init",
+    "online_product",
+    "online_update",
+    "parametric",
+    "pool",
+    "subpost_average",
+)
 
-def nonparametric_img(
+
+def _warn(name: str, replacement: str) -> None:
+    warnings.warn(
+        f"repro.core.combine.{name} is deprecated; use {replacement} "
+        "(or drive runs through repro.api.RunSpec/Pipeline)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def _nonparametric_img(
     key: jax.Array,
     samples: jnp.ndarray,
     n_draws: int,
@@ -39,14 +54,16 @@ def nonparametric_img(
     counts: Optional[jnp.ndarray] = None,
     schedule: Optional[Schedule] = None,
     rescale: bool = False,
-) -> CombineResult:
+):
     """Algorithm 1 (§3.2) — historical signature; see ``combiners.img``."""
-    return _img.nonparametric(
+    from repro.core.combiners import img
+
+    return img.nonparametric(
         key, samples, n_draws, counts=counts, schedule=schedule, rescale=rescale
     )
 
 
-def semiparametric_img(
+def _semiparametric_img(
     key: jax.Array,
     samples: jnp.ndarray,
     n_draws: int,
@@ -55,9 +72,11 @@ def semiparametric_img(
     schedule: Optional[Schedule] = None,
     rescale: bool = False,
     nonparametric_weights: bool = False,
-) -> CombineResult:
+):
     """§3.3 semiparametric combiner — historical signature; see ``combiners.img``."""
-    return _img.semiparametric(
+    from repro.core.combiners import img
+
+    return img.semiparametric(
         key,
         samples,
         n_draws,
@@ -65,4 +84,26 @@ def semiparametric_img(
         schedule=schedule,
         rescale=rescale,
         nonparametric_weights=nonparametric_weights,
+    )
+
+
+def __getattr__(name: str):
+    if name in _FORWARDED:
+        _warn(name, f"repro.core.combiners.{name}")
+        import repro.core.combiners as combiners
+
+        return getattr(combiners, name)
+    if name == "nonparametric_img":
+        _warn(name, "repro.core.combiners.get_combiner('nonparametric')")
+        return _nonparametric_img
+    if name == "semiparametric_img":
+        _warn(name, "repro.core.combiners.get_combiner('semiparametric')")
+        return _semiparametric_img
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(
+        list(globals()) + list(_FORWARDED)
+        + ["nonparametric_img", "semiparametric_img"]
     )

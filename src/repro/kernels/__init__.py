@@ -1,3 +1,47 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the numeric hot spots (+ shared platform policy).
+
+One subpackage per hot spot the pipeline actually leans on — each ships a
+``kernel.py`` (the Pallas body), an ``ops.py`` (jit'd public wrapper:
+padding, dispatch, platform policy), and a ``ref.py`` oracle the tests pin
+the kernel against.
+
+:func:`default_interpret` is the single platform-aware resolver for the
+kernels' ``interpret`` flag: Pallas interpret mode is what makes the kernels
+runnable (and testable) on the CPU rig, while a real TPU wants the compiled
+path. Every ``ops.py`` defaults its ``interpret`` argument to ``None`` and
+resolves it here, so the policy lives in exactly one place and
+``REPRO_PALLAS_INTERPRET=0|1`` overrides it fleet-wide without touching
+call sites.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+
+def default_interpret() -> bool:
+    """Platform-aware default for the Pallas ``interpret`` flag.
+
+    ``False`` on a real TPU backend (compiled Mosaic path), ``True``
+    everywhere else (CPU/GPU rigs run the kernels in interpret mode).
+    The ``REPRO_PALLAS_INTERPRET`` environment variable overrides both.
+    Resolution happens at trace time — the jitted wrappers cache on
+    ``interpret=None``, so flip the env var before the first kernel call.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        val = env.strip().lower()
+        if val in _TRUTHY:
+            return True
+        if val in _FALSY:
+            return False
+        raise ValueError(
+            f"REPRO_PALLAS_INTERPRET={env!r} — expected one of "
+            f"{_TRUTHY + _FALSY}"
+        )
+    return jax.default_backend() != "tpu"

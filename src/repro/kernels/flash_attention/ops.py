@@ -7,6 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_fwd_kernel
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
@@ -26,10 +27,12 @@ def flash_attention(
     causal: bool = True,
     block_q: int = 512,
     block_k: int = 512,
-    interpret: bool = True,  # CPU rig default; False on real TPU
+    interpret: bool | None = None,  # None -> repro.kernels.default_interpret()
     min_kernel_s: int = 64,
 ) -> jnp.ndarray:
     """Pallas flash-attention forward; returns (B, S, K, G, hd_v)."""
+    if interpret is None:
+        interpret = default_interpret()
     b, s, kh, g, hd = q.shape
     t = k.shape[1]
     hd_v = v.shape[-1]

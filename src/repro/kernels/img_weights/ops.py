@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.img_weights.kernel import img_log_weights_kernel
 from repro.kernels.img_weights.ref import img_log_weights_ref
 
@@ -29,9 +30,11 @@ def img_log_weights(
     *,
     block_p: int = 256,
     block_d: int = 512,
-    interpret: bool = True,  # CPU rig: interpret; flip to False on real TPU
+    interpret: bool | None = None,  # None -> repro.kernels.default_interpret()
     min_kernel_p: int = 64,
 ) -> jnp.ndarray:
+    if interpret is None:
+        interpret = default_interpret()
     P, M, d = theta.shape
     if P < min_kernel_p:
         return img_log_weights_ref(theta, h)

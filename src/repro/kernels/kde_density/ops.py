@@ -7,6 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.kde_density.kernel import kde_log_density_kernel
 from repro.kernels.kde_density.ref import kde_log_density_ref
 
@@ -25,9 +26,11 @@ def kde_log_density(
     *,
     block_q: int = 256,
     block_s: int = 512,
-    interpret: bool = True,  # CPU rig default; False on real TPU
+    interpret: bool | None = None,  # None -> repro.kernels.default_interpret()
     min_kernel_n: int = 64,
 ) -> jnp.ndarray:
+    if interpret is None:
+        interpret = default_interpret()
     nq, d = queries.shape
     ns = centers.shape[0]
     if nq < min_kernel_n or ns < min_kernel_n:

@@ -8,6 +8,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.logreg_loglik.kernel import logreg_loglik_grad_kernel
 from repro.kernels.logreg_loglik.ref import logreg_loglik_grad_ref
 
@@ -24,13 +25,15 @@ def logreg_loglik_grad(
     *,
     scale: float | jnp.ndarray = 1.0,
     block_n: int = 1024,
-    interpret: bool = True,  # CPU rig default; False on real TPU
+    interpret: bool | None = None,  # None -> repro.kernels.default_interpret()
     min_kernel_n: int = 256,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused (ℓ, ∇ℓ) of the logistic likelihood; matches ``ref.py`` exactly.
 
     Returns ((), (d,)) for 1-D beta and ((C,), (d, C)) for 2-D beta.
     """
+    if interpret is None:
+        interpret = default_interpret()
     N, d = X.shape
     single = beta.ndim == 1
     if N < min_kernel_n:

@@ -1,10 +1,11 @@
-"""EP-MCMC driver for the paper's Bayes models (§8) — the reproduction CLI.
+"""EP-MCMC driver CLI — a thin argparse adapter over :mod:`repro.api`.
 
-A thin pipeline over the registries: **partition → sample → combine → score**.
-Models are resolved by name from :mod:`repro.models.bayes.registry`, samplers
-from :mod:`repro.samplers.registry` (any × any — criterion 3), combiners from
-:mod:`repro.core.combiners`; adding an entry to any registry makes it
-reachable here with zero driver changes.
+Every flag maps onto a field of :class:`repro.api.RunSpec`; execution is one
+:class:`repro.api.Pipeline` run (partition → sample → combine → score, same
+RNG discipline and scoreboard as ever — fixed seeds reproduce pre-``repro.api``
+numbers bitwise). Models, samplers, and combiners are resolved by registry
+name; adding an entry to any registry makes it reachable here with zero
+driver changes.
 
   PYTHONPATH=src python -m repro.launch.mcmc_run --model logreg --M 10 \
       --sampler hmc --samples 2000
@@ -22,306 +23,71 @@ stage contains zero cross-chain collectives; on the mesh path this is
 *asserted on the compiled HLO* via
 :func:`repro.distributed.epmcmc.assert_no_cross_chain_collectives` — the
 paper's "embarrassingly parallel" claim, machine-checked per run.
+
+The sampling engine itself lives in :mod:`repro.api.sampling`; the historical
+module-level names (``make_shard_sampler``, ``sample_subposteriors``,
+``groundtruth_chain``, ``SampleResult``) are re-exported here with a
+``DeprecationWarning`` — import them from ``repro.api`` instead.
 """
 
 from __future__ import annotations
 
 import argparse
-import math
-import time
-import zlib
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+import warnings
 
-import jax
-import jax.numpy as jnp
+from repro.api import Pipeline, RunSpec
+from repro.core.combiners import available_combiners
+from repro.models.bayes import available_models
+from repro.samplers import available_samplers
 
-from repro.core import metrics
-from repro.core.combiners import (
-    available_combiners,
-    canonical_combiners,
-    filter_options,
-    get_combiner,
+# historical internals, now owned by repro.api.sampling — resolved lazily so
+# importing this CLI module stays cheap and old imports keep working (warned)
+_MOVED = (
+    "SampleResult",
+    "make_shard_sampler",
+    "sample_subposteriors",
+    "groundtruth_chain",
+    "_shard_axes",
+    "_sample_on_mesh",
+    "LOG_L2_DIM",
 )
-from repro.core.subposterior import make_subposterior_logpdf, partition_data
-from repro.models.bayes import BayesModel, available_models, get_model
-from repro.samplers import available_samplers, run_chain, sampler_spec
-
-PyTree = Any
-
-# models at or above this θ-dimension are scored in log space: raw
-# `l2_distance` enters the f32-overflow regime of the KDE normalizer there
-# (its own docstring's warning) and becomes hypersensitive to dispersion
-LOG_L2_DIM = 40
 
 
-class SampleResult(NamedTuple):
-    """Output of the parallel sampling stage."""
-
-    theta: jnp.ndarray  # (M, T, d) shared-θ subposterior draws
-    accept: jnp.ndarray  # (M,) mean acceptance per chain
-    counts: jnp.ndarray  # (M,) real data rows per shard (pad=True convention)
-    backend: str  # "vmap" | "shard_map(<ndev> devices)"
-    collectives_checked: Optional[int]  # HLO collectives verified chain-local
-
-
-def _shard_axes(shards: PyTree, shard_keys, per_datum_leaf, broadcast_leaf):
-    """Per-leaf vmap axes / PartitionSpecs: per-datum leaves carry the chain
-    axis, broadcast leaves (e.g. gmm mixture weights) are replicated."""
-    if shard_keys is None:
-        return jax.tree.map(lambda _: per_datum_leaf, shards)
-    return {
-        k: (per_datum_leaf if k in shard_keys else broadcast_leaf)
-        for k in shards
-    }
-
-
-def make_shard_sampler(
-    model: BayesModel,
-    num_shards: int,
-    sampler: str,
-    *,
-    num_samples: int,
-    burn_in: int,
-    warmup: int,
-    step_size: float,
-    sgld_batch: int = 256,
-    use_counts: bool = True,
-) -> Callable[[PyTree, jnp.ndarray, jax.Array], Tuple[jnp.ndarray, jnp.ndarray]]:
-    """Build ``one_shard(shard, count, key) -> (theta (T, d), mean_accept)``.
-
-    The returned function is pure and shape-uniform across shards, so the
-    launch layer can drive it under ``vmap`` (one device) or ``shard_map``
-    (chain groups over the mesh data axis) unchanged. ``use_counts=False``
-    statically drops the padded-row likelihood correction (every shard row is
-    real) so the divisible-N hot path pays nothing for pad support.
-    """
-    spec = sampler_spec(sampler)
-
-    def one_shard(shard, count, key):
-        k_init, k_run = jax.random.split(key)
-
-        if spec.name == "gibbs":  # alias-safe: spec.name is canonical
-            if not model.has_gibbs:
-                raise ValueError(
-                    f"model {model.name!r} supplies no Gibbs blocks "
-                    "(BayesModel.gibbs_blocks)"
-                )
-            blocks = model.gibbs_blocks(shard, num_shards, step_size=step_size)
-            kern = spec.factory(None, step_size=step_size, block_updates=blocks)
-            pos0 = model.gibbs_init(k_init, shard)
-            # non-adaptive: warmup transitions are just extra burn-in
-            pos, info = run_chain(
-                k_run, kern, pos0, num_samples, burn_in=burn_in + warmup
-            )
-            theta = model.gibbs_extract(pos)
-            return theta, info.is_accepted.mean()
-
-        logpdf = make_subposterior_logpdf(
-            model.log_prior,
-            model.log_lik,
-            shard,
-            num_shards,
-            count=count if use_counts else None,
-            per_datum=model.shard_keys,
+def __getattr__(name: str):
+    if name in _MOVED:
+        warnings.warn(
+            f"repro.launch.mcmc_run.{name} moved to repro.api — import it "
+            "from repro.api (or drive whole runs via RunSpec/Pipeline)",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        pos0 = model.initial_position(k_init, shard)
+        if name == "LOG_L2_DIM":
+            from repro.api.pipeline import LOG_L2_DIM
 
-        if spec.name == "sgld":
-            # minibatch subposterior gradients (paper §7): scale by the
-            # shard's REAL row count so padded rows never bias the estimate
-            if model.shard_keys is None:
-                per_datum = shard
-                rest = None
-            else:
-                per_datum = {k: shard[k] for k in model.shard_keys}
-                rest = {k: v for k, v in shard.items() if k not in model.shard_keys}
-            shard_size = jax.tree.leaves(per_datum)[0].shape[0]
-            batch_size = min(sgld_batch or shard_size, shard_size)
-            inv_m = 1.0 / float(num_shards)
-            n_real = count if use_counts else shard_size
+            return LOG_L2_DIM
+        from repro.api import sampling
 
-            def mb_logpdf(theta, batch):
-                scale = jnp.asarray(n_real, jnp.float32) / float(batch_size)
-                return inv_m * model.log_prior(theta) + scale * model.log_lik(
-                    theta, batch
-                )
-
-            def batch_fn(k, _t):
-                idx = jax.random.randint(
-                    k, (batch_size,), 0, jnp.maximum(n_real, 1)
-                )
-                batch = jax.tree.map(lambda x: x[idx], per_datum)
-                return batch if rest is None else {**rest, **batch}
-
-            kern = spec.factory(
-                logpdf,
-                step_size=step_size,
-                grad_logpdf=jax.grad(mb_logpdf),
-                batch_fn=batch_fn,
-            )
-            pos, info = run_chain(
-                k_run, kern, pos0, num_samples, burn_in=burn_in + warmup
-            )
-            return pos, info.is_accepted.mean()
-
-        if spec.adaptive and warmup > 0:
-            factory = lambda eps: spec.factory(logpdf, step_size=eps)
-            pos, info = run_chain(
-                k_run,
-                factory,
-                pos0,
-                num_samples,
-                burn_in=burn_in,
-                warmup=warmup,
-                initial_step_size=step_size,
-                target_accept=spec.target_accept,
-            )
-        else:
-            kern = spec.factory(logpdf, step_size=step_size)
-            # non-adaptive kernels treat warmup as extra burn-in (registry
-            # convention); adaptive ones only reach here when warmup == 0
-            pos, info = run_chain(
-                k_run,
-                kern,
-                pos0,
-                num_samples,
-                burn_in=burn_in + (0 if spec.adaptive else warmup),
-            )
-        return pos, info.is_accepted.mean()
-
-    return one_shard
+        return getattr(sampling, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def sample_subposteriors(
-    key: jax.Array,
-    model: BayesModel,
-    data: PyTree,
-    num_shards: int,
-    num_samples: int,
-    *,
-    sampler: Optional[str] = None,
-    warmup: int = 200,
-    burn_in: int = 0,
-    step_size: float = 0.1,
-    sgld_batch: int = 256,
-    check_hlo: bool = True,
-) -> SampleResult:
-    """The embarrassingly parallel stage: M independent subposterior chains.
-
-    Partitions ``data`` (edge-padded — non-divisible N is fine), then runs
-    one chain per shard. With >1 local device and ``num_shards`` divisible by
-    the device count, chains are ``shard_map``-ped over the ``data`` axis of
-    a ``(ndev, 1)`` ("data", "model") mesh and the compiled HLO is asserted
-    collective-free across chains; otherwise the chains are vmapped on one
-    device. Zero cross-chain communication either way.
-    """
-    sampler = sampler or model.default_sampler
-    shards, counts = partition_data(
-        data, num_shards, only=model.shard_keys, pad=True
+def build_spec(args: argparse.Namespace) -> RunSpec:
+    """The whole adapter: argparse namespace → declarative RunSpec."""
+    return RunSpec(
+        model=args.model,
+        sampler=args.sampler,
+        combiner=args.combiner,
+        M=args.M,
+        T=args.samples,
+        warmup=args.warmup,
+        burn_in=args.burn_in,
+        step_size=args.step,
+        sgld_batch=args.sgld_batch,
+        n=args.n,
+        seed=args.seed,
+        groundtruth_T=args.groundtruth_samples,
+        combiner_options={"n_batch": args.img_batch},
     )
-    shard_rows = jax.tree.leaves(
-        shards if model.shard_keys is None
-        else {k: shards[k] for k in model.shard_keys}
-    )[0].shape[1]
-    padded = bool(jax.device_get(jnp.any(counts != shard_rows)))
-    if padded and sampler_spec(sampler).name == "gibbs":
-        raise ValueError(
-            "gibbs block updates operate on the raw shard and cannot mask "
-            f"padded rows; choose M dividing N (counts={jax.device_get(counts)})"
-        )
-    one_shard = make_shard_sampler(
-        model,
-        num_shards,
-        sampler,
-        num_samples=num_samples,
-        burn_in=burn_in,
-        warmup=warmup,
-        step_size=step_size,
-        sgld_batch=sgld_batch,
-        # divisible N ⇒ every row is real ⇒ skip the pad correction entirely
-        use_counts=padded,
-    )
-    keys = jax.random.split(key, num_shards)
-    in_axes = (_shard_axes(shards, model.shard_keys, 0, None), 0, 0)
-    vmapped = jax.vmap(one_shard, in_axes=in_axes)
-
-    ndev = jax.device_count()
-    if ndev > 1 and num_shards % ndev == 0:
-        theta, acc, checked = _sample_on_mesh(
-            vmapped, shards, counts, keys, model, ndev, check_hlo
-        )
-        return SampleResult(
-            theta, acc, counts, f"shard_map({ndev} devices)", checked
-        )
-    theta, acc = jax.jit(vmapped)(shards, counts, keys)
-    return SampleResult(theta, acc, counts, "vmap", None)
-
-
-def _sample_on_mesh(vmapped, shards, counts, keys, model, ndev, check_hlo):
-    """shard_map the vmapped per-shard sampler over the mesh data axis.
-
-    Each device owns ``M/ndev`` chains + their data shards; broadcast leaves
-    are replicated. The jitted program is lowered AOT so the post-SPMD HLO
-    can be asserted collective-free *before* it runs — the machine-checked
-    "embarrassingly parallel" property.
-    """
-    from functools import partial
-
-    from jax.experimental.shard_map import shard_map
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    # late import: epmcmc pulls the (heavy) LM stack this CLI otherwise skips
-    from repro.distributed.epmcmc import assert_no_cross_chain_collectives
-
-    mesh = jax.make_mesh((ndev, 1), ("data", "model"))
-    shard_specs = _shard_axes(shards, model.shard_keys, P("data"), P())
-    in_specs = (shard_specs, P("data"), P("data"))
-    body = partial(
-        shard_map,
-        mesh=mesh,
-        in_specs=in_specs,
-        out_specs=(P("data"), P("data")),
-        check_rep=False,
-    )(vmapped)
-    compiled = jax.jit(body).lower(shards, counts, keys).compile()
-    checked = None
-    if check_hlo:
-        checked = assert_no_cross_chain_collectives(compiled.as_text(), mesh)
-    put = lambda tree, specs: jax.tree.map(
-        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs
-    )
-    theta, acc = compiled(
-        put(shards, shard_specs), put(counts, P("data")), put(keys, P("data"))
-    )
-    return theta, acc, checked
-
-
-def groundtruth_chain(
-    key: jax.Array,
-    model: BayesModel,
-    data: PyTree,
-    num_samples: int,
-    *,
-    sampler: Optional[str] = None,
-    warmup: int = 200,
-    burn_in: int = 0,
-    step_size: float = 0.1,
-    sgld_batch: int = 256,
-) -> jnp.ndarray:
-    """Single full-data chain (num_shards=1) with the same sampler surface."""
-    one = make_shard_sampler(
-        model,
-        1,
-        sampler or model.default_sampler,
-        num_samples=num_samples,
-        burn_in=burn_in,
-        warmup=warmup,
-        step_size=step_size,
-        sgld_batch=sgld_batch,
-        use_counts=False,  # full data: every row is real
-    )
-    theta, _ = jax.jit(lambda k: one(data, jnp.zeros((), jnp.int32), k))(key)
-    return theta
 
 
 def main(argv=None) -> dict:
@@ -358,93 +124,39 @@ def main(argv=None) -> dict:
         "--img-batch", type=int, default=1,
         help="independent vmapped IMG index-chains (n_batch) for the exact combiners",
     )
+    ap.add_argument(
+        "--checkpoint-dir", default=None,
+        help="persist/resume the sampling stage here (chunked kernel state)",
+    )
+    ap.add_argument(
+        "--checkpoint-every", type=int, default=0,
+        help="draws per sampling checkpoint (with --checkpoint-dir; 0 = at end)",
+    )
     args = ap.parse_args(argv)
 
-    model = get_model(args.model)
-    sampler = args.sampler or model.default_sampler
-    key = jax.random.PRNGKey(args.seed)
-    n = args.n or model.default_n
-    data, _theta_true = model.generate_data(key, n)
-    burn = args.burn_in or args.samples // 6  # paper §8: discard first 1/6
-    t_start = time.time()
-
-    # --- partition + subposterior chains (embarrassingly parallel) ----------
-    res = sample_subposteriors(
-        jax.random.fold_in(key, 1),
-        model,
-        data,
-        args.M,
-        args.samples,
-        sampler=sampler,
-        warmup=args.warmup,
-        burn_in=burn,
-        step_size=args.step,
-        sgld_batch=args.sgld_batch,
+    pipe = Pipeline(
+        build_spec(args),
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
     )
-    subsamps = res.theta
-    t_sample = time.time() - t_start
-
-    # --- groundtruth: single full-data chain --------------------------------
-    # the full posterior is ~√M narrower than a subposterior and its gradient
-    # M× larger; warmup absorbs that for adaptive kernels, fixed-step ones
-    # need the classic compensation (ε/M for Langevin time steps, ε/√M for
-    # proposal scales)
-    spec = sampler_spec(sampler)
-    if spec.name == "sgld":
-        gt_step = args.step / args.M
-    elif not (spec.adaptive and args.warmup > 0):
-        gt_step = args.step / math.sqrt(args.M)
-    else:
-        gt_step = args.step
-    gt = groundtruth_chain(
-        jax.random.fold_in(key, 2),
-        model,
-        data,
-        args.groundtruth_samples,
-        sampler=sampler,
-        warmup=args.warmup,
-        burn_in=args.groundtruth_samples // 6,
-        step_size=gt_step,
-        sgld_batch=args.sgld_batch,
-    )
-    t_full = time.time() - t_start - t_sample
-
-    # --- combinations + error scoreboard ------------------------------------
-    kc = jax.random.fold_in(key, 3)
-    results = {}
-    T = args.samples
-    # high-d runs score in log space (f32-overflow regime of raw L2)
-    use_log = model.d >= LOG_L2_DIM
-    score = metrics.log_l2_distance if use_log else metrics.l2_distance
-    label = "logL2" if use_log else "L2"
-
-    names = canonical_combiners() if args.combiner == "all" else [args.combiner]
-    t0 = time.time()
-    for name in names:
-        fn = get_combiner(name)
-        # independent RNG per estimator (fold_in by a stable hash of the name
-        # — one shared key would correlate the scoreboard entries), and only
-        # the options each combiner's signature declares are forwarded
-        k_name = jax.random.fold_in(kc, zlib.crc32(name.encode()) & 0x7FFFFFFF)
-        opts = filter_options(fn, dict(rescale=True, n_batch=args.img_batch))
-        out = fn(k_name, subsamps, T, **opts)
-        results[name] = float(score(gt, out.samples))
-    t_combine = time.time() - t0
+    board = pipe.run()
 
     checked = (
-        "" if res.collectives_checked is None
-        else f" hlo_collectives_checked={res.collectives_checked}"
+        "" if board.collectives_checked is None
+        else f" hlo_collectives_checked={board.collectives_checked}"
     )
     print(
-        f"model={model.name} M={args.M} T={T} sampler={sampler} "
-        f"warmup={args.warmup} acc={float(jnp.mean(res.accept)):.2f} "
-        f"backend={res.backend}{checked}"
+        f"model={board.model} M={board.M} T={board.T} sampler={board.sampler} "
+        f"warmup={args.warmup} acc={board.accept:.2f} "
+        f"backend={board.backend}{checked}"
     )
-    print(f"timing: {t_sample:.1f}s parallel sampling, {t_full:.1f}s full chain, "
-          f"{t_combine:.1f}s all combinations")
-    for k_, v in sorted(results.items(), key=lambda kv: kv[1]):
-        print(f"  {label}({k_:15s}) = {v:.4f}")
-    return results
+    t = board.timings
+    print(f"timing: {t.get('sample_s', 0.0):.1f}s parallel sampling, "
+          f"{t.get('groundtruth_s', 0.0):.1f}s full chain, "
+          f"{t.get('combine_s', 0.0):.1f}s all combinations")
+    for k_, v in sorted(board.errors.items(), key=lambda kv: kv[1]):
+        print(f"  {board.metric}({k_:15s}) = {v:.4f}")
+    return dict(board.errors)
 
 
 if __name__ == "__main__":

@@ -60,7 +60,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import json
 import jax, jax.numpy as jnp
-from repro.launch.mcmc_run import sample_subposteriors
+from repro.api import sample_subposteriors
 from repro.models.bayes import get_model
 
 model = get_model("poisson")
