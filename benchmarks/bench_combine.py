@@ -58,11 +58,13 @@ def run(full: bool = False) -> List[Row]:
                     "vectorized all-M-proposals sweep via Pallas img_weights"))
 
     # The PR-2 exact families on the same workload — one-shot (rpt /
-    # importance_pool) vs annealed-Gibbs (weierstrass) vs the IMG chain above.
+    # importance_pool) vs annealed-Gibbs (weierstrass) vs the IMG chain
+    # above — plus the PR-5 streaming-moments parametric product.
     for name, note in (
         ("weierstrass", "Gibbs refinement ensemble (n_chains=8 default)"),
         ("rpt", "median-cut partition + per-leaf product mass"),
         ("importance_pool", "pooled cloud reweighted by product/mixture KDEs"),
+        ("online", "Welford streaming moments, batch face (paper §4)"),
     ):
         cfn = get_combiner(name)
         opts = filter_options(cfn, dict(rescale=True, n_batch=4))

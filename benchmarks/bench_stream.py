@@ -1,0 +1,101 @@
+"""Streaming combination: time-to-first-scoreboard vs gather-then-combine.
+
+The gather path cannot produce *any* posterior estimate until all T draws
+per chain have landed and the combiner has run on the full ``(M, T, d)``
+stack. The streaming engine (``Pipeline.stream_combine``) folds each
+``stream_every``-draw chunk into the combiners as it lands, so the first
+estimate exists after one chunk of sampling plus one cheap ``estimate``
+call — a latency win that grows with T. This bench records, at M ∈ {4, 10}:
+
+- ``gather_then_combine``: wall time until the batch path's first combined
+  result (full sampling + one combine);
+- ``time_to_first_estimate``: wall time until the streaming path's first
+  trajectory point (the acceptance criterion: strictly below the above);
+- ``stream_total``: the streaming run's time to its *final* (bitwise-equal)
+  combined result — the overlap overhead/amortization figure;
+- ``first_estimate_speedup``: gather latency / time-to-first-estimate.
+
+Groundtruth scoring is skipped on both sides (``score=False``): the bench
+measures the sample→combine dataflow, not the reference chain. Both paths
+are warmed once before timing (each timed run is a fresh Pipeline hitting
+the jit cache): the figures compare dataflow latency — what a serving loop
+pays per run — not one-off XLA compile time, which would otherwise swamp
+the CPU-sized quick configuration.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+
+from benchmarks.common import Row, block
+from repro.api import Pipeline, RunSpec
+
+# quick T is sized so chain compute (not per-run tracing) dominates even on
+# a CPU rig — smaller T turns both paths into pure trace benchmarks
+T_QUICK, T_FULL = 1200, 4000
+COMBINER = "parametric"
+
+
+def _spec(M: int, T: int, stream_every: int = 0) -> RunSpec:
+    return RunSpec(
+        model="linear",
+        sampler="mala",
+        combiner=(COMBINER,),
+        M=M,
+        T=T,
+        warmup=50,
+        n=4096,
+        seed=0,
+        groundtruth_T=100,  # unused (score=False) but part of the spec
+        score_metric="logl2",
+        stream_every=stream_every,
+    )
+
+
+def _gather_latency(M: int, T: int) -> float:
+    """Full sampling, then one batch combine — time to the first estimate
+    the classic path can offer."""
+    pipe = Pipeline(_spec(M, T), check_hlo=False)
+    t0 = time.perf_counter()
+    draws = pipe.sample()
+    block(draws.theta)
+    res = pipe.combine()[COMBINER]
+    block(res.samples)
+    return time.perf_counter() - t0
+
+
+def _stream_run(M: int, T: int, stream_every: int):
+    pipe = Pipeline(_spec(M, T, stream_every), check_hlo=False)
+    t0 = time.perf_counter()
+    sr = pipe.stream_combine(n_estimate=128, score=False)
+    return time.perf_counter() - t0, sr
+
+
+def run(full: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    T = T_FULL if full else T_QUICK
+    for M in (4, 10):
+        stream_every = max(T // 12, 1)
+        _gather_latency(M, T)  # warm (compile) both program sets
+        _stream_run(M, T, stream_every)
+
+        t_gather = _gather_latency(M, T)
+        t_stream_total, sr = _stream_run(M, T, stream_every)
+        t_first = sr.trajectory[0]["elapsed_s"]
+
+        extra = f"model=linear T={T} stream_every={stream_every} combiner={COMBINER}"
+        rows.append(Row("stream", f"M={M}", "gather_then_combine",
+                        t_gather, "s", extra))
+        rows.append(Row("stream", f"M={M}", "time_to_first_estimate",
+                        t_first, "s", extra))
+        rows.append(Row("stream", f"M={M}", "stream_total",
+                        t_stream_total, "s",
+                        f"{len(sr.trajectory)} trajectory points"))
+        rows.append(Row("stream", f"M={M}", "first_estimate_speedup",
+                        t_gather / max(t_first, 1e-9), "x",
+                        "gather latency / time-to-first-estimate"))
+        assert sr.complete and len(sr.trajectory) >= 2
+    return rows

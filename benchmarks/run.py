@@ -31,6 +31,9 @@ BENCHES = [
     ("samplers", "benchmarks.bench_samplers"),
     ("matrix", "benchmarks.bench_matrix"),
     ("combine", "benchmarks.bench_combine"),
+    # "stream", not "stream_combine": --only combine must keep selecting the
+    # combine bench alone (substring filter)
+    ("stream", "benchmarks.bench_stream"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
 ]

@@ -36,12 +36,19 @@ from repro.api.pipeline import (  # noqa: F401
     Pipeline,
     Scoreboard,
     ShardedData,
+    StreamResult,
     SubposteriorDraws,
     combine_draws,
 )
 from repro.api.resumable import (  # noqa: F401
     ResumableSample,
     sample_subposteriors_resumable,
+)
+from repro.api.streaming import (  # noqa: F401
+    ShardChainStream,
+    StreamChunk,
+    StreamedSample,
+    stream_sample,
 )
 from repro.api.sampling import (  # noqa: F401
     SampleResult,
@@ -73,8 +80,12 @@ __all__ = [
     "RunSpec",
     "SampleResult",
     "Scoreboard",
+    "ShardChainStream",
     "ShardKernel",
     "ShardedData",
+    "StreamChunk",
+    "StreamResult",
+    "StreamedSample",
     "SubposteriorDraws",
     "combine_draws",
     "groundtruth_chain",
@@ -84,4 +95,5 @@ __all__ = [
     "run_shard_chain",
     "sample_subposteriors",
     "sample_subposteriors_resumable",
+    "stream_sample",
 ]

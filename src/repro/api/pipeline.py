@@ -17,12 +17,20 @@ groundtruth ``fold_in(key, 2)``, one independent stream per combiner from
 ``fold_in(key, 3)`` + a stable hash of the name), so the same spec always
 produces bitwise-identical artifacts.
 
-With ``checkpoint_dir`` set, the sampling stage runs the chunked driver of
-:mod:`repro.api.resumable`: every ``checkpoint_every`` draws the live kernel
-state is persisted via :mod:`repro.checkpoint`, and a new Pipeline pointed
-at the same directory resumes mid-chain instead of restarting.
+The sampling stage always runs the chunk-emitting driver of
+:mod:`repro.api.streaming` on the vmap backend: chunks of
+``spec.stream_every`` draws (one T-sized chunk when 0) land in order, and
+everything else subscribes — checkpoint persistence (``checkpoint_dir`` /
+``checkpoint_every``, resume mid-chain bitwise), and **combine-while-
+sampling** via :meth:`Pipeline.stream_combine`, which folds every landed
+chunk into the requested streaming combiners
+(:func:`repro.core.combiners.get_streaming_combiner`), records a per-chunk
+scoreboard trajectory, and finalizes estimates that are bitwise the
+gather-then-combine result for the buffered combiners. The one exception is
+the mesh backend: specs that ``shard_map`` over >1 device keep the one-shot
+program so the compiled HLO can still be asserted collective-free.
 
-The combination stage dispatches through
+The batch combination stage dispatches through
 :func:`repro.distributed.epmcmc.combine_gathered` — the same registry-name
 backend the mesh EP-MCMC run uses — so scenario code and the distributed
 runtime share one combine path.
@@ -33,16 +41,22 @@ from __future__ import annotations
 import math
 import time
 import zlib
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.api.spec import RunSpec
 from repro.api.sampling import groundtruth_chain, sample_subposteriors
+from repro.api.streaming import StreamChunk, stream_sample
 from repro.core import metrics
 from repro.core.subposterior import partition_data
-from repro.core.combiners import CombineResult
+from repro.core.combiners import (
+    CombineResult,
+    filter_options,
+    get_combiner,
+    get_streaming_combiner,
+)
 from repro.models.bayes import get_model
 from repro.samplers import sampler_spec
 
@@ -126,10 +140,33 @@ class SubposteriorDraws(NamedTuple):
     theta: jnp.ndarray  # (M, T, d) shared-θ draws
     accept: jnp.ndarray  # (M,) mean acceptance per chain
     counts: jnp.ndarray  # (M,)
-    backend: str  # "vmap" | "shard_map(...)" | "vmap[resumable]"
+    backend: str  # "vmap[chunked]" | "vmap[resumable]" | "shard_map(...)"
     collectives_checked: Optional[int]
     t_done: int  # draws collected so far (== T unless interrupted)
     complete: bool
+
+
+class StreamResult(NamedTuple):
+    """Artifact of :meth:`Pipeline.stream_combine` (combine-while-sampling).
+
+    ``trajectory`` rows are ``{"t", "combiner", "error", "elapsed_s"}`` —
+    one per (chunk boundary, combiner-with-a-cheap-``estimate``), in
+    landing order (fallback-streamed combiners fold every chunk but only
+    finalize, so they contribute no rows); ``elapsed_s`` is
+    wall time since the stream started (``trajectory[0]["elapsed_s"]`` is
+    the time-to-first-estimate the bench tracks; on a resumed run the
+    replayed prefix carries the resume session's clock). ``combined`` holds
+    the finalized per-combiner results (empty while ``complete`` is False).
+    """
+
+    combined: Dict[str, CombineResult]
+    trajectory: List[Dict[str, Any]]
+    t_done: int
+    total: int
+    complete: bool
+    metric: str  # "L2" | "logL2" | "" when unscored
+    stream_every: int
+    n_estimate: int
 
 
 class Scoreboard(NamedTuple):
@@ -204,49 +241,57 @@ class Pipeline:
 
     # -- stage 2: sample (embarrassingly parallel) ---------------------------
 
-    def sample(self, max_steps: Optional[int] = None) -> SubposteriorDraws:
-        """Run (or resume) the M subposterior chains.
+    def sample(
+        self,
+        max_steps: Optional[int] = None,
+        on_chunk: Sequence[Callable[[StreamChunk], None]] = (),
+    ) -> SubposteriorDraws:
+        """Run (or resume) the M subposterior chains as one chunk stream.
 
-        ``max_steps`` bounds the draws collected *this call* (resumable mode
-        only) — the budgeted-sampling / preemption-simulation hook. A
+        ``max_steps`` bounds the draws collected *this call* (checkpointed
+        runs only) — the budgeted-sampling / preemption-simulation hook. A
         partial artifact has ``complete=False``; calling ``sample()`` again
-        continues from the persisted kernel state.
+        continues from the persisted kernel state. ``on_chunk`` subscribers
+        see every landed ``(M, C, d)`` chunk in order, restored prefixes
+        included (:meth:`stream_combine` is the built-in subscriber).
+
+        Backend routing: the chunked vmap driver
+        (:func:`repro.api.streaming.stream_sample`) everywhere, except
+        specs that ``shard_map`` over >1 device with no checkpoint/stream
+        request — those keep the one-shot program whose compiled HLO is
+        asserted collective-free.
         """
         if self._draws is not None and self._draws.complete:
             return self._draws
         spec = self.spec
+        wants_stream = (
+            spec.stream_every > 0
+            or self.checkpoint_dir is not None
+            or bool(on_chunk)
+        )
+        if spec.mesh_shape is not None and wants_stream:
+            raise ValueError(
+                "checkpointed/streaming sampling runs the chunked vmap "
+                f"backend only — a spec with mesh_shape={spec.mesh_shape} "
+                "would silently lose its shard_map/HLO-assert request; "
+                "drop one of the two"
+            )
         sharded = self.partition()
         t0 = time.time()
-        if self.checkpoint_dir is not None:
-            if spec.mesh_shape is not None:
-                raise ValueError(
-                    "checkpointed sampling runs the vmap backend only — a "
-                    f"spec with mesh_shape={spec.mesh_shape} would silently "
-                    "lose its shard_map/HLO-assert request; drop one of the two"
-                )
-            from repro.api.resumable import sample_subposteriors_resumable
+        ndev = jax.device_count()
+        auto_mesh = spec.mesh_shape is None and ndev > 1 and spec.M % ndev == 0
+        if auto_mesh and wants_stream:
+            # an explicit mesh_shape raises above; the implicit one only
+            # warns — but must not silently walk off the multi-device cliff
+            import warnings
 
-            rs = sample_subposteriors_resumable(
-                jax.random.fold_in(self._key, 1),
-                self._model,
-                sharded.data,
-                spec.M,
-                spec.T,
-                sampler=spec.sampler,
-                warmup=spec.warmup,
-                burn_in=spec.resolved_burn_in(),
-                step_size=spec.step_size,
-                sgld_batch=spec.sgld_batch,
-                sampler_options=spec.sampler_options,
-                checkpoint_dir=self.checkpoint_dir,
-                checkpoint_every=self.checkpoint_every,
-                spec_id=spec.spec_id,
-                max_steps=max_steps,
-                shards=sharded.shards,
-                counts=sharded.counts,
+            warnings.warn(
+                f"streaming/checkpointed sampling runs the chunked vmap "
+                f"backend on one device — the {ndev}-device auto-mesh this "
+                "spec would otherwise shard_map over is bypassed",
+                stacklevel=2,
             )
-            res, t_done, complete = rs.result, rs.t_done, rs.complete
-        else:
+        if (spec.mesh_shape is not None or auto_mesh) and not wants_stream:
             if max_steps is not None:
                 raise ValueError(
                     "max_steps needs a checkpoint_dir: a partial sampling "
@@ -270,6 +315,34 @@ class Pipeline:
                 counts=sharded.counts,
             )
             t_done, complete = spec.T, True
+        else:
+            if max_steps is not None and self.checkpoint_dir is None:
+                raise ValueError(
+                    "max_steps needs a checkpoint_dir: a partial sampling "
+                    "stage is only useful if it can be resumed"
+                )
+            rs = stream_sample(
+                jax.random.fold_in(self._key, 1),
+                self._model,
+                sharded.data,
+                spec.M,
+                spec.T,
+                sampler=spec.sampler,
+                warmup=spec.warmup,
+                burn_in=spec.resolved_burn_in(),
+                step_size=spec.step_size,
+                sgld_batch=spec.sgld_batch,
+                sampler_options=spec.sampler_options,
+                shards=sharded.shards,
+                counts=sharded.counts,
+                chunk_size=spec.stream_every,
+                max_steps=max_steps,
+                checkpoint_dir=self.checkpoint_dir,
+                checkpoint_every=self.checkpoint_every,
+                spec_id=spec.spec_id,
+                on_chunk=on_chunk,
+            )
+            res, t_done, complete = rs.result, rs.t_done, rs.complete
         self.timings["sample_s"] = self.timings.get("sample_s", 0.0) + (
             time.time() - t0
         )
@@ -302,6 +375,140 @@ class Pipeline:
             )
             self.timings["groundtruth_s"] = time.time() - t0
         return self._groundtruth
+
+    # -- stage 3b: combine-while-sampling ------------------------------------
+
+    def stream_combine(
+        self,
+        names: Optional[Tuple[str, ...]] = None,
+        *,
+        n_estimate: int = 128,
+        max_steps: Optional[int] = None,
+        score: bool = True,
+    ) -> StreamResult:
+        """Fold each landed sampling chunk into the streaming combiners.
+
+        Requires ``spec.stream_every > 0``. As every ``stream_every``-draw
+        chunk lands, it is ``update``-folded into one
+        :class:`~repro.core.combiners.api.StreamingCombiner` per requested
+        name and a cheap ``estimate`` (``n_estimate`` draws) is taken — the
+        per-chunk scoreboard trajectory. Combiners whose streaming form has
+        no cheap ``estimate`` (the generic buffered fallback — weierstrass,
+        rpt, …) still fold every chunk but contribute no mid-stream rows:
+        re-running a heavy batch combiner on the growing buffer at every
+        boundary would cost more than the gather path the stream exists to
+        beat. When sampling completes, each state
+        is ``finalize``\\ d with the *same* RNG stream and options as the
+        batch combine stage, so the final results are bitwise the
+        gather-then-combine ones for the buffered combiners (``parametric``,
+        ``pool``, ``nonparametric``, every fallback) and within Welford
+        merge-rounding for ``online``; :meth:`score` then reuses them.
+
+        ``score=False`` skips the groundtruth chain and leaves trajectory
+        errors ``None`` (the bench's time-to-first-estimate mode);
+        ``max_steps`` bounds this session (checkpointed runs — a later
+        ``stream_combine`` on the same directory replays the restored
+        prefix and reproduces the uninterrupted trajectory exactly).
+        """
+        spec = self.spec
+        if spec.stream_every <= 0:
+            raise ValueError(
+                "stream_combine needs RunSpec.stream_every > 0 — with no "
+                "chunk cadence there is nothing to fold mid-run (set e.g. "
+                "stream_every=T//10, or use combine())"
+            )
+        names = spec.combiner_names() if names is None else tuple(names)
+        scs = {}
+        for name in names:
+            get_combiner(name)  # fail fast on unknown names
+            scs[name] = get_streaming_combiner(name)
+        options = dict(
+            {"rescale": True, "n_batch": 1}, **dict(spec.combiner_options)
+        )
+        kc = jax.random.fold_in(self._key, 3)
+        k_names = {
+            name: jax.random.fold_in(kc, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+            for name in names
+        }
+        states: Dict[str, Any] = {name: None for name in names}
+        rows: List[Dict[str, Any]] = []
+        estimates: List[Tuple[int, str, jnp.ndarray]] = []
+        t_start = time.time()
+
+        def fold(ev: StreamChunk) -> None:
+            M, _, d = ev.theta.shape
+            for name in names:
+                sc = scs[name]
+                if states[name] is None:
+                    states[name] = sc.init(M, d)
+                states[name] = sc.update(states[name], ev.theta)
+            for name in names:
+                est_fn = scs[name].estimate
+                if est_fn is None:
+                    continue  # no cheap mid-stream estimate — finalize-only
+                k_est = jax.random.fold_in(k_names[name], ev.t1)
+                est = est_fn(
+                    k_est, states[name], n_estimate,
+                    **filter_options(est_fn, options),
+                )
+                est.samples.block_until_ready()  # honest elapsed_s
+                if score:
+                    estimates.append((ev.t1, name, est.samples))
+                rows.append({
+                    "t": ev.t1,
+                    "combiner": name,
+                    "error": None,
+                    "elapsed_s": time.time() - t_start,
+                })
+
+        if self._draws is not None and self._draws.complete:
+            # sampling already ran (e.g. combine() first): replay the cached
+            # draws at the stream cadence — same chunks, same states
+            theta = self._draws.theta
+            zeros = jnp.zeros((spec.M,), jnp.float32)
+            for r0 in range(0, spec.T, spec.stream_every):
+                r1 = min(r0 + spec.stream_every, spec.T)
+                fold(StreamChunk(
+                    theta[:, r0:r1], zeros, r0, r1, spec.T, {}, replayed=True
+                ))
+            draws = self._draws
+        else:
+            draws = self.sample(max_steps=max_steps, on_chunk=(fold,))
+
+        final: Dict[str, CombineResult] = {}
+        if draws.complete:
+            t0 = time.time()
+            for name in names:
+                fn = scs[name].finalize
+                final[name] = fn(
+                    k_names[name], states[name], spec.T,
+                    **filter_options(fn, options),
+                )
+            self.timings["stream_combine_s"] = time.time() - t0
+            # the finals ARE the combine-stage results (bitwise for the
+            # buffered implementations) — let score() reuse them
+            if self._combined is None and set(names) == set(spec.combiner_names()):
+                self._combined = dict(final)
+                self.timings.setdefault(
+                    "combine_s", self.timings["stream_combine_s"]
+                )
+
+        label = ""
+        if score:
+            gt = self.groundtruth()
+            dist, label = resolve_metric(spec, self._model.d)
+            for row, (_, _, samples) in zip(rows, estimates):
+                row["error"] = float(dist(gt, samples))
+        return StreamResult(
+            combined=final,
+            trajectory=rows,
+            t_done=draws.t_done,
+            total=spec.T,
+            complete=draws.complete,
+            metric=label,
+            stream_every=spec.stream_every,
+            n_estimate=n_estimate,
+        )
 
     # -- stage 3: combine (the only communicating stage) ---------------------
 

@@ -1,12 +1,10 @@
 """Chunked, checkpointable subposterior sampling — resume mid-chain.
 
-The one-shot drivers in :mod:`repro.api.sampling` run each chain under a
-single ``lax.scan``; a preemption loses the whole stage. This driver runs
-the *same* per-step transitions in chunks, persisting the live kernel state
-between chunks via :mod:`repro.checkpoint`, so sampling interrupted at chain
-step t resumes from the persisted state rather than restarting — and the
-final draws are **bitwise identical** to the uninterrupted (chunked) run,
-because:
+Since the streaming refactor this module is a thin adapter: the chunk loop
+itself lives in :mod:`repro.api.streaming` (``ShardChainStream`` /
+``stream_sample``), where checkpoint persistence is one *subscriber* of the
+chunk stream rather than a fork of the driver. What this wrapper pins down
+is the historical resumable contract:
 
 - the per-step RNG keys are a pure function of the spec's seed
   (``jax.random.split(k_collect, T)`` computed identically on every
@@ -20,31 +18,22 @@ because:
   ``tests/test_api_resume.py`` pins the bitwise contract and the numerical
   agreement with the one-shot vmap path separately).
 
-Checkpoint layout (one ``repro.checkpoint`` step per chunk boundary, step
-number = draws collected): kernel state stacked over chains, per-chain ε and
-collect key, the draws so far, and acceptance sums; metadata records the
-owning ``spec_id`` so a directory can never resume a different scenario.
+Checkpoint layout (one ``repro.checkpoint`` step per boundary, step number =
+draws collected): kernel state stacked over chains, per-chain ε and collect
+key, the draws so far, and acceptance sums; metadata records the owning
+``spec_id`` (a directory can never resume a different scenario) plus the
+checkpoint and chunk cadences (a mid-flight run is cadence-locked).
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 
-from repro.checkpoint import latest_step, restore, save
-from repro.core.subposterior import partition_data
 from repro.models.bayes import BayesModel
-from repro.samplers.adaptation import warmup_chain
-from repro.api.sampling import (
-    SampleResult,
-    ShardKernel,
-    is_padded,
-    _shard_axes,
-    make_shard_kernel,
-)
+from repro.api.sampling import SampleResult
+from repro.api.streaming import StreamChunk, stream_sample
 
 PyTree = Any
 
@@ -66,51 +55,6 @@ class ResumableSample(NamedTuple):
         return self.t_done >= self.total
 
 
-def _setup_one(sk: ShardKernel, shard, count, key, *, burn_in, warmup, step_size):
-    """Warmup + burn-in for one shard; mirrors ``run_shard_chain``'s RNG
-    discipline exactly so chunked draws match the one-shot path bitwise."""
-    k_init, k_run = jax.random.split(key)
-    pos0 = sk.init_position(k_init, shard)
-    if sk.adaptive and warmup > 0:
-        k_run, k_warm = jax.random.split(k_run)
-        kernel, pos0, eps = warmup_chain(
-            k_warm,
-            lambda e: sk.build(shard, count, e),
-            pos0,
-            warmup,
-            initial_step_size=step_size,
-            target_accept=sk.target_accept,
-        )
-        burn = burn_in
-    else:
-        eps = jnp.asarray(step_size, jnp.float32)
-        kernel = sk.build(shard, count, step_size)
-        burn = burn_in + (0 if sk.adaptive else warmup)
-    state = kernel.init(pos0)
-    if burn > 0:
-        keys = jax.random.split(k_run, burn + 1)
-        k_run = keys[0]
-
-        def warm(s, k):
-            s, _ = kernel.step(k, s)
-            return s, None
-
-        state, _ = jax.lax.scan(warm, state, keys[1:])
-    return state, eps, k_run
-
-
-def _chunk_one(sk: ShardKernel, shard, count, eps, state, keys):
-    """Advance one chain by ``len(keys)`` draws from a live kernel state."""
-    kernel = sk.build(shard, count, eps)
-
-    def collect(s, k):
-        s, info = kernel.step(k, s)
-        return s, (s.position, info.is_accepted)
-
-    state, (pos, acc) = jax.lax.scan(collect, state, keys)
-    return state, sk.extract(pos), acc.astype(jnp.float32).sum()
-
-
 def sample_subposteriors_resumable(
     key: jax.Array,
     model: BayesModel,
@@ -129,157 +73,48 @@ def sample_subposteriors_resumable(
     spec_id: str = "",
     max_steps: Optional[int] = None,
     shards: Optional[PyTree] = None,
-    counts: Optional[jnp.ndarray] = None,
+    counts: Optional[jax.Array] = None,
+    chunk_size: int = 0,
+    on_chunk: Sequence[Callable[[StreamChunk], None]] = (),
 ) -> ResumableSample:
     """Run (or resume) the parallel sampling stage with chunked persistence.
 
-    ``checkpoint_every`` draws per chunk (0 ⇒ one chunk, persisted only at
-    the end); ``max_steps`` stops after that many draws this session —
-    budgeted sampling, and the test hook for simulating preemption. Sessions
-    advance in whole chunks, so ``max_steps`` requires a chunk cadence it
-    can actually express: ``checkpoint_every > 0`` and at least one chunk's
-    worth of budget (anything less would silently do zero durable work).
-    A later call with the same ``checkpoint_dir``/``spec_id`` picks up where
-    this one stopped; a directory owned by a different ``spec_id`` raises.
+    ``checkpoint_every`` draws per saved boundary (0 ⇒ one chunk, persisted
+    only at the end); ``chunk_size`` optionally emits finer-grained chunks
+    between saves (``checkpoint_every`` must then be a multiple of it — the
+    combine-while-sampling cadence); ``max_steps`` stops after that many
+    draws this session — budgeted sampling, and the test hook for simulating
+    preemption. Sessions advance in whole chunks, so ``max_steps`` requires
+    a cadence it can actually express (anything less would silently do zero
+    durable work). A later call with the same ``checkpoint_dir``/``spec_id``
+    picks up where this one stopped; a directory owned by a different
+    ``spec_id`` raises; ``on_chunk`` subscribers see every chunk, restored
+    prefix included (``replayed=True``).
     """
-    if max_steps is not None and (
-        checkpoint_every <= 0 or max_steps < checkpoint_every
-    ):
-        raise ValueError(
-            f"max_steps={max_steps} cannot make durable progress: sessions "
-            "advance in whole chunks, so it needs checkpoint_every > 0 and "
-            f"max_steps >= checkpoint_every (got {checkpoint_every})"
-        )
-    sampler = sampler or model.default_sampler
-    if shards is None or counts is None:
-        shards, counts = partition_data(
-            data, num_shards, only=model.shard_keys, pad=True
-        )
-    padded = is_padded(model, shards, counts, sampler)
-    sk = make_shard_kernel(
+    ss = stream_sample(
+        key,
         model,
+        data,
         num_shards,
-        sampler,
+        num_samples,
+        sampler=sampler,
+        warmup=warmup,
+        burn_in=burn_in,
+        step_size=step_size,
         sgld_batch=sgld_batch,
-        use_counts=padded,
         sampler_options=sampler_options,
+        shards=shards,
+        counts=counts,
+        chunk_size=chunk_size,
+        max_steps=max_steps,
+        checkpoint_dir=checkpoint_dir,
+        checkpoint_every=checkpoint_every,
+        spec_id=spec_id,
+        on_chunk=on_chunk,
     )
-    keys = jax.random.split(key, num_shards)
-    shard_axes = _shard_axes(shards, model.shard_keys, 0, None)
-    setup = jax.jit(
-        jax.vmap(
-            functools.partial(
-                _setup_one, sk, burn_in=burn_in, warmup=warmup, step_size=step_size
-            ),
-            in_axes=(shard_axes, 0, 0),
-        )
-    )
-
-    # -- restore or initialize ----------------------------------------------
-    step = latest_step(checkpoint_dir)
-    if step is not None:
-        state_struct = jax.eval_shape(setup, shards, counts, keys)
-        carry, meta = _restore_carry(
-            checkpoint_dir, step, state_struct, model.d, num_shards
-        )
-        if meta.get("spec_id") != spec_id or meta.get("T") != num_samples:
-            raise ValueError(
-                f"checkpoint at {checkpoint_dir} belongs to spec "
-                f"{meta.get('spec_id')!r} (T={meta.get('T')}), not "
-                f"{spec_id!r} (T={num_samples}) — refusing to resume"
-            )
-        t_done = int(meta["t_done"])
-        # the bitwise guarantee rests on GLOBAL chunk boundaries; resuming an
-        # unfinished run at a different cadence would replay the tail under a
-        # different program split (a finished run has no tail to replay)
-        if t_done < num_samples and meta.get("checkpoint_every") != checkpoint_every:
-            raise ValueError(
-                f"checkpoint at {checkpoint_dir} was written with "
-                f"checkpoint_every={meta.get('checkpoint_every')}; resuming "
-                f"mid-run with checkpoint_every={checkpoint_every} would "
-                "shift chunk boundaries and void the bitwise-resume "
-                "guarantee — pass the original cadence"
-            )
-        resumed_from = t_done
-    else:
-        state, eps, k_collect = setup(shards, counts, keys)
-        carry = {
-            "state": state,
-            "eps": eps,
-            "k_collect": k_collect,
-            "theta": jnp.zeros((num_shards, 0, model.d), jnp.float32),
-            "accept_sum": jnp.zeros((num_shards,), jnp.float32),
-        }
-        t_done = 0
-        resumed_from = 0
-
-    # per-step keys: pure function of the seed — identical on every session
-    collect_keys = jax.vmap(lambda k: jax.random.split(k, num_samples))(
-        carry["k_collect"]
-    )
-
-    chunk_fn = jax.jit(
-        jax.vmap(
-            functools.partial(_chunk_one, sk),
-            in_axes=(shard_axes, 0, 0, 0, 0),
-        )
-    )
-
-    # sessions advance in WHOLE chunks: boundaries at k·checkpoint_every (+ T)
-    # are global, so an interrupted-then-resumed run replays exactly the same
-    # chunk programs as an uninterrupted one — that is what makes the bitwise
-    # guarantee structural rather than a fusion accident. max_steps therefore
-    # rounds DOWN to a chunk boundary (preemption semantics: partial-chunk
-    # work is lost anyway).
-    stop = num_samples if max_steps is None else min(num_samples, t_done + max_steps)
-    chunk = checkpoint_every if checkpoint_every > 0 else num_samples
-    while t_done < stop:
-        t1 = min(t_done + chunk, num_samples)
-        if t1 > stop:
-            break  # ragged chunk would shift later boundaries; stop here
-        state, theta_c, acc_c = chunk_fn(
-            shards, counts, carry["eps"], carry["state"], collect_keys[:, t_done:t1]
-        )
-        carry = {
-            "state": state,
-            "eps": carry["eps"],
-            "k_collect": carry["k_collect"],
-            "theta": jnp.concatenate([carry["theta"], theta_c], axis=1),
-            "accept_sum": carry["accept_sum"] + acc_c,
-        }
-        t_done = t1
-        save(
-            checkpoint_dir,
-            t_done,
-            carry,
-            metadata={
-                "spec_id": spec_id,
-                "t_done": t_done,
-                "T": num_samples,
-                "checkpoint_every": checkpoint_every,
-            },
-            keep=2,
-        )
-
-    accept = carry["accept_sum"] / jnp.maximum(t_done, 1)
     return ResumableSample(
-        result=SampleResult(
-            carry["theta"], accept, counts, "vmap[resumable]", None
-        ),
-        t_done=t_done,
-        total=num_samples,
-        resumed_from=resumed_from,
+        result=ss.result,
+        t_done=ss.t_done,
+        total=ss.total,
+        resumed_from=ss.resumed_from,
     )
-
-
-def _restore_carry(checkpoint_dir, step, state_struct, d, num_shards):
-    """Rebuild the carry pytree from a checkpoint, typed by the setup shapes."""
-    state, eps, k_collect = state_struct
-    template = {
-        "state": state,
-        "eps": eps,
-        "k_collect": k_collect,
-        "theta": jax.ShapeDtypeStruct((num_shards, step, d), jnp.float32),
-        "accept_sum": jax.ShapeDtypeStruct((num_shards,), jnp.float32),
-    }
-    return restore(checkpoint_dir, step=step, template=template)

@@ -8,11 +8,12 @@ flags onto a :class:`repro.api.RunSpec`) and factored into two layers:
   concrete shard and a (possibly traced) step size, and how to project
   stacked positions back to the shared ``(T, d)`` θ. Because ``build`` is a
   pure function of ``(shard, count, step_size)``, the same ShardKernel
-  serves three drivers: the one-shot chain here, the chunked/resumable
-  driver (:mod:`repro.api.resumable`, which rebuilds the kernel from a
-  checkpointed ε), and the compile-cached matrix runner
-  (:mod:`repro.api.matrix`, which traces ``step_size`` so specs differing
-  only there share one executable).
+  serves three drivers: the one-shot chain here, the chunk-emitting stream
+  driver (:mod:`repro.api.streaming` — checkpointing and combine-while-
+  sampling subscribe to it; it rebuilds the kernel from a checkpointed ε on
+  resume), and the compile-cached matrix runner (:mod:`repro.api.matrix`,
+  which traces ``step_size`` so specs differing only there share one
+  executable).
 - :func:`run_shard_chain` is the per-shard glue — RNG discipline, warmup
   dispatch, burn-in accounting — shared by every driver so their draws are
   bitwise identical.
@@ -107,9 +108,16 @@ def make_shard_kernel(
                 f"model {model.name!r} supplies no Gibbs blocks "
                 "(BayesModel.gibbs_blocks)"
             )
+        # models declaring gibbs_counts mask the edge-padded replicated rows
+        # out of their conditionals (count= is the pad convention's valid
+        # prefix); everyone else sees the raw shard, exactly as before
+        pass_count = model.gibbs_counts and use_counts
 
         def build_gibbs(shard, count, step_size):
-            blocks = model.gibbs_blocks(shard, num_shards, step_size=step_size)
+            kwargs = {"count": count} if pass_count else {}
+            blocks = model.gibbs_blocks(
+                shard, num_shards, step_size=step_size, **kwargs
+            )
             return spec.factory(
                 None, step_size=step_size, block_updates=blocks, **extra
             )
@@ -351,10 +359,16 @@ def is_padded(model, shards, counts, sampler) -> bool:
         else {k: shards[k] for k in model.shard_keys}
     )[0].shape[1]
     padded = bool(jax.device_get(jnp.any(counts != shard_rows)))
-    if padded and sampler_spec(sampler).name == "gibbs":
+    if (
+        padded
+        and sampler_spec(sampler).name == "gibbs"
+        and not model.gibbs_counts
+    ):
         raise ValueError(
-            "gibbs block updates operate on the raw shard and cannot mask "
-            f"padded rows; choose M dividing N (counts={jax.device_get(counts)})"
+            f"model {model.name!r}'s gibbs block updates operate on the raw "
+            "shard and cannot mask padded rows (BayesModel.gibbs_counts is "
+            "False); choose M dividing N "
+            f"(counts={jax.device_get(counts)})"
         )
     return padded
 

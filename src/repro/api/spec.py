@@ -23,8 +23,9 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import json
-from typing import Any, Dict, Iterable, Mapping, Optional, Tuple, Union
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Tuple, Union
 
 import jax
 
@@ -66,6 +67,9 @@ class RunSpec:
     seed: int = 0
     groundtruth_T: int = 4000
     score_metric: str = "auto"  # "auto" (logL2 iff d >= 40) | "l2" | "logl2"
+    stream_every: int = 0  # >0: sample in chunks of this many draws and fold
+    # each chunk into the streaming combiners as it lands (combine-while-
+    # sampling; Pipeline.stream_combine). 0 = one chunk (classic gather).
     mesh_shape: Optional[Tuple[int, int]] = None
     sampler_options: Tuple[Tuple[str, Any], ...] = ()
     combiner_options: Tuple[Tuple[str, Any], ...] = ()
@@ -79,7 +83,8 @@ class RunSpec:
         set_(self, "sampler_options", _freeze_options(self.sampler_options))
         set_(self, "combiner_options", _freeze_options(self.combiner_options))
         for field, lo in (("M", 1), ("T", 1), ("warmup", 0), ("burn_in", 0),
-                          ("n", 0), ("groundtruth_T", 1), ("sgld_batch", 0)):
+                          ("n", 0), ("groundtruth_T", 1), ("sgld_batch", 0),
+                          ("stream_every", 0)):
             if int(getattr(self, field)) < lo:
                 raise ValueError(f"RunSpec.{field} must be >= {lo}")
         if not self.step_size > 0:
@@ -186,7 +191,50 @@ class RunSpec:
             "sample", self.model, self.resolved_sampler(), self.M, self.T,
             self.warmup, self.resolved_burn_in(), self.resolved_n(),
             self.sgld_batch, self.mesh_shape, self.sampler_options,
+            # chunk cadence shapes the compiled chunk program (Pipeline's
+            # chunked driver); 0 keeps pre-streaming signatures grouped
+            self.stream_every,
         )
+
+    # -- sweep grammar -------------------------------------------------------
+
+    def sweep(self, **axes: Iterable[Any]) -> List["RunSpec"]:
+        """Cartesian sweep over field values → a validated spec list.
+
+        ``spec.sweep(seed=range(8), combiner=["parametric", "nonparametric"])``
+        yields 16 cells ready for :func:`repro.api.run_matrix`. Each keyword
+        names a RunSpec field and supplies an *iterable of values* for it
+        (a bare string is rejected — pass ``combiner=["parametric"]``, not
+        ``combiner="parametric"``); axes combine as an outer product in
+        keyword order, varying the last axis fastest. Cells differing only
+        in runtime inputs (``seed``, ``step_size``, ``combiner``) share one
+        :meth:`executable_signature`, so the matrix runner compiles once
+        for the whole sweep.
+        """
+        if not axes:
+            return [self]
+        known = {f.name for f in dataclasses.fields(self)}
+        lists = []
+        for name, values in axes.items():
+            if name not in known:
+                raise ValueError(
+                    f"sweep axis {name!r} is not a RunSpec field "
+                    f"(choices: {', '.join(sorted(known))})"
+                )
+            if isinstance(values, (str, bytes)) or not isinstance(values, Iterable):
+                raise TypeError(
+                    f"sweep axis {name!r} needs an iterable of field values "
+                    f"(got {values!r}); a single value still goes in a list"
+                )
+            values = list(values)
+            if not values:
+                raise ValueError(f"sweep axis {name!r} is empty")
+            lists.append(values)
+        names = list(axes)
+        return [
+            dataclasses.replace(self, **dict(zip(names, combo))).validate()
+            for combo in itertools.product(*lists)
+        ]
 
     def groundtruth_signature(self) -> Tuple[Any, ...]:
         """Compile statics of the single full-data groundtruth chain."""

@@ -36,6 +36,9 @@ registry name               paper    procedure
                                      reweighted by Σ_m log p̂_m − log q̂ with
                                      self-normalized (truncated) resampling
                                      (alias ``importance_weighted_pool``)
+``online``                  §4       streaming parametric product from Welford
+                                     running moments — O(d²) state, no gathered
+                                     stack (alias ``online_parametric``)
 ==========================  =======  ==================================================
 
 The IMG combiners additionally accept ``n_batch`` (independent vmapped index
@@ -67,20 +70,39 @@ Bandwidth convention: the Gaussian kernel is ``N(θ | θ^m_{t_m}, h² I_d)``;
 the paper's §3.3 occasionally writes ``h`` where dimensional consistency
 requires ``h²`` — we use ``h²`` throughout (matching §3.2 and the annealed
 schedule).
+
+Streaming convention (paper §4): every registered name also resolves to a
+:class:`StreamingCombiner` (``init(M, d) → update(state, chunk, counts)* →
+finalize(key, state, n_draws)``) via :func:`get_streaming_combiner` —
+natively incremental for ``parametric``/``pool``/``subpost_average``/
+``nonparametric``/``online`` (:mod:`repro.core.combiners.streaming` and
+``online``'s own registration), exact buffered fallback for the rest.
+Chunks are dense ``(M, C, d)`` per-machine slices; ``finalize`` on the
+buffered implementations is bitwise the batch combiner on the gathered
+stack. Consumers: ``Pipeline.stream_combine`` (combine-while-sampling) and
+``epmcmc.combine_stream`` (mesh chunked gather).
 """
 
 from repro.core.combiners.api import (  # noqa: F401
+    BufferState,
     Combiner,
     CombineResult,
+    StreamingCombiner,
     available_combiners,
+    buffer_append,
+    buffer_init,
+    buffered_streaming,
     canonical_combiners,
     counts_or_full,
     filter_options,
     get_combiner,
+    get_streaming_combiner,
     log_weight_bruteforce,
     ragged_gather,
     register,
+    register_streaming,
     resolve_schedule,
+    streaming_combiners,
     valid_masks,
 )
 from repro.core.combiners.baselines import (  # noqa: F401
@@ -104,10 +126,16 @@ from repro.core.combiners.density import (  # noqa: F401
 from repro.core.combiners.importance_pool import importance_pool  # noqa: F401
 from repro.core.combiners.online import (  # noqa: F401
     OnlineMoments,
+    online,
     online_init,
     online_product,
     online_update,
+    online_update_chunk,
 )
 from repro.core.combiners.parametric import parametric  # noqa: F401
 from repro.core.combiners.rpt import rpt  # noqa: F401
 from repro.core.combiners.weierstrass import weierstrass  # noqa: F401
+
+# native streaming implementations attach to the names registered above, so
+# this import must stay last
+from repro.core.combiners import streaming as _streaming  # noqa: F401

@@ -14,6 +14,15 @@ Registry: implementations self-register at import time via :func:`register`;
 consumers resolve them by name with :func:`get_combiner` and enumerate them
 with :func:`available_combiners`. Importing :mod:`repro.core.combiners`
 populates the registry with every built-in combiner.
+
+Streaming (paper §4 — combine as samples arrive): every registered name also
+resolves to a :class:`StreamingCombiner` via :func:`get_streaming_combiner` —
+either a native incremental implementation (attached through ``register``'s
+``streaming=`` slot or :func:`register_streaming`) or the exact buffered
+fallback (:func:`buffered_streaming`), whose ``update``\ s-then-``finalize``
+is bitwise identical to calling the batch combiner on the gathered stack.
+The streaming drivers run on the host between chunk arrivals (``update`` may
+branch on concrete shapes/counts); do not wrap them in ``jax.jit``.
 """
 
 from __future__ import annotations
@@ -56,22 +65,66 @@ class Combiner(Protocol):
     ) -> CombineResult: ...
 
 
+class StreamingCombiner(NamedTuple):
+    """Uniform incremental combination protocol (paper §4).
+
+    - ``init(M, d) -> state``: empty accumulator for M machines in d dims;
+    - ``update(state, chunk, chunk_counts) -> state``: fold one dense
+      ``(M, C, d)`` per-machine chunk of draws in; ``chunk_counts (M,)``
+      marks each machine's valid prefix *within the chunk* (None ⇒ all C);
+    - ``finalize(key, state, n_draws, **options) -> CombineResult``: draw
+      the combined estimate. Pure — a state may be finalized repeatedly
+      (and updated further afterwards);
+    - ``estimate`` (optional): a cheap mid-stream snapshot with the same
+      signature as ``finalize`` — what the per-chunk scoreboard trajectory
+      calls; ``None`` means finalize is already cheap enough.
+
+    States are ordinary pytrees handed back to the caller; the protocol is
+    host-driven (``update`` may branch on concrete counts — don't jit it).
+    """
+
+    init: Callable[[int, int], Any]
+    update: Callable[..., Any]
+    finalize: Callable[..., CombineResult]
+    estimate: Optional[Callable[..., CombineResult]] = None
+
+
 _REGISTRY: Dict[str, Combiner] = {}
 _CANONICAL: Dict[str, Combiner] = {}  # primary names only (no aliases)
+_STREAMING: Dict[str, StreamingCombiner] = {}  # native incremental impls
 
 
-def register(name: str, *aliases: str) -> Callable[[Combiner], Combiner]:
-    """Decorator: add a combiner to the registry under ``name`` (+ aliases)."""
+def register(
+    name: str, *aliases: str, streaming: Optional[StreamingCombiner] = None
+) -> Callable[[Combiner], Combiner]:
+    """Decorator: add a combiner to the registry under ``name`` (+ aliases).
+
+    ``streaming=`` attaches a native :class:`StreamingCombiner` under the
+    same names; combiners without one fall back to the exact buffered
+    adapter in :func:`get_streaming_combiner`.
+    """
 
     def deco(fn: Combiner) -> Combiner:
         for key in (name, *aliases):
             if key in _REGISTRY:
                 raise ValueError(f"combiner {key!r} already registered")
             _REGISTRY[key] = fn
+            if streaming is not None:
+                _STREAMING[key] = streaming
         _CANONICAL[name] = fn
         return fn
 
     return deco
+
+
+def register_streaming(name: str, sc: StreamingCombiner) -> StreamingCombiner:
+    """Attach a native streaming implementation to an already-registered
+    batch combiner ``name`` (propagates to its aliases)."""
+    fn = get_combiner(name)
+    for key, batch in _REGISTRY.items():
+        if batch is fn:
+            _STREAMING[key] = sc
+    return sc
 
 
 def get_combiner(name: str) -> Combiner:
@@ -92,6 +145,100 @@ def available_combiners() -> Tuple[str, ...]:
 def canonical_combiners() -> Tuple[str, ...]:
     """Primary registration names only (aliases dropped), sorted."""
     return tuple(sorted(_CANONICAL))
+
+
+def streaming_combiners() -> Tuple[str, ...]:
+    """Canonical names with a *native* incremental implementation (every
+    other registered name still streams via the buffered fallback)."""
+    return tuple(sorted(k for k in _STREAMING if k in _CANONICAL))
+
+
+def get_streaming_combiner(name: str) -> StreamingCombiner:
+    """Resolve a name to a :class:`StreamingCombiner`.
+
+    Natively streaming combiners return their registered implementation;
+    everything else gets :func:`buffered_streaming` over the batch callable,
+    whose ``update*k + finalize`` is *bitwise* the batch result.
+    """
+    if name in _STREAMING:
+        return _STREAMING[name]
+    return buffered_streaming(get_combiner(name))
+
+
+# ---------------------------------------------------------------------------
+# buffered streaming state (the exact fallback + the KDE-center accumulator)
+# ---------------------------------------------------------------------------
+
+
+class BufferState(NamedTuple):
+    """Dense accumulated draws: the gathered ``(M, t, d)`` stack grown
+    chunk by chunk, with the valid-prefix ``counts`` convention."""
+
+    theta: jnp.ndarray  # (M, t, d)
+    counts: jnp.ndarray  # (M,) valid prefix per machine
+
+
+def buffer_init(M: int, d: int, dtype=jnp.float32) -> BufferState:
+    return BufferState(
+        theta=jnp.zeros((M, 0, d), dtype), counts=jnp.zeros((M,), jnp.int32)
+    )
+
+
+def buffer_append(
+    state: BufferState, chunk: jnp.ndarray, chunk_counts: Optional[jnp.ndarray] = None
+) -> BufferState:
+    """Append a dense ``(M, C, d)`` chunk, keeping valid rows a prefix.
+
+    Dense-so-far chunks concatenate verbatim (the bitwise-fallback hot
+    path); ragged ones are compacted per machine so chain m's valid draws
+    stay rows ``[0, counts[m])`` — the combiners' layout contract.
+    """
+    M, C, _ = chunk.shape
+    cc = (
+        jnp.full((M,), C, jnp.int32)
+        if chunk_counts is None
+        else chunk_counts.astype(jnp.int32)
+    )
+    t = state.theta.shape[1]
+    stacked = jnp.concatenate([state.theta, chunk], axis=1)
+    total = state.counts + cc
+    if bool(jnp.all(state.counts == t)) and bool(jnp.all(cc == C)):
+        return BufferState(stacked, total)
+    # compact: old valid prefix, then this chunk's valid prefix; the tail
+    # beyond total[m] is garbage and invalid by construction
+    j = jnp.arange(t + C)[None, :]
+    idx = jnp.where(j < state.counts[:, None], j, t + j - state.counts[:, None])
+    idx = jnp.clip(idx, 0, t + C - 1)
+    return BufferState(jnp.take_along_axis(stacked, idx[:, :, None], axis=1), total)
+
+
+def buffer_batch_args(state: BufferState):
+    """``(theta, counts)`` ready for a batch combiner call — ``counts`` is
+    ``None`` when every chain is dense, so the fallback takes *exactly* the
+    code path (and numerics) of the gather-then-combine caller."""
+    t = state.theta.shape[1]
+    dense = bool(jnp.all(state.counts == t))
+    return state.theta, (None if dense else state.counts)
+
+
+def buffered_streaming(fn: Combiner) -> StreamingCombiner:
+    """The exact streaming fallback for a batch combiner.
+
+    State is the growing :class:`BufferState`; ``finalize`` replays the
+    batch combiner on it, so ``update*k + finalize`` ≡ batch **bitwise**
+    (identical arrays, identical key, identical option filtering).
+    """
+
+    def finalize(key, state: BufferState, n_draws: int, **options):
+        theta, counts = buffer_batch_args(state)
+        if theta.shape[1] == 0:
+            raise ValueError("streaming finalize before any update() chunk")
+        kwargs = filter_kwargs(fn, options)
+        if counts is not None:
+            kwargs["counts"] = counts
+        return fn(key, theta, n_draws, **kwargs)
+
+    return StreamingCombiner(init=buffer_init, update=buffer_append, finalize=finalize)
 
 
 def filter_options(combiner: Combiner, options: Dict[str, Any]) -> Dict[str, Any]:

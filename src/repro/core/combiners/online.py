@@ -1,12 +1,40 @@
-"""Online parametric combiner (paper §4: combine as samples stream in)."""
+"""Online parametric combiner (paper §4: combine as samples stream in).
+
+The Welford/product machinery keeps O(d²) state per machine and needs O(1)
+work per sample, so the parametric product estimate is available at *any*
+point of the stream — no gathered ``(M, T, d)`` stack required. It is
+registered as the ``online`` combiner with both faces:
+
+- batch: ``online(key, samples, n_draws, counts=...)`` folds the whole
+  stack through one chunk update and samples the product — so
+  ``--combiner online`` works from ``mcmc_run`` / ``bench_combine`` even
+  outside streaming mode;
+- streaming: the registry's :class:`~repro.core.combiners.api.StreamingCombiner`
+  slot, whose state *is* :class:`OnlineMoments` — the one built-in combiner
+  that never buffers draws.
+
+Tolerance note: Welford merges associate differently across chunkings, so a
+streamed ``online`` run agrees with its batch face only to merge-rounding
+(f32 last-ulp per fold), and with the batch ``parametric`` combiner to
+O(jitter + rounding) — ``parametric`` fits masked two-pass moments, this
+path merges running moments. The exact-bitwise streaming guarantee belongs
+to the buffered combiners (see ``api.buffered_streaming``).
+"""
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
+import jax
 import jax.numpy as jnp
 
-from repro.core.gaussian import GaussianMoments, product_moments
+from repro.core.combiners.api import (
+    CombineResult,
+    StreamingCombiner,
+    counts_or_full,
+    register,
+)
+from repro.core.gaussian import GaussianMoments, product_moments, sample_gaussian
 
 
 class OnlineMoments(NamedTuple):
@@ -38,9 +66,87 @@ def online_update(state: OnlineMoments, m: jnp.ndarray, theta: jnp.ndarray) -> O
     )
 
 
+def online_update_chunk(
+    state: OnlineMoments,
+    chunk: jnp.ndarray,
+    chunk_counts: Optional[jnp.ndarray] = None,
+) -> OnlineMoments:
+    """Fold a dense ``(M, C, d)`` chunk into the moments (Chan's parallel
+    Welford merge, vectorized over machines).
+
+    ``chunk_counts (M,)`` marks each machine's valid prefix within the chunk
+    (None ⇒ all C rows). Invalid rows may hold arbitrary garbage — they are
+    excluded with ``where``, never mask-multiplied (0·NaN would leak).
+    """
+    M, C, d = chunk.shape
+    cc = (
+        jnp.full((M,), C, jnp.int32)
+        if chunk_counts is None
+        else chunk_counts.astype(jnp.int32)
+    )
+    mask = (jnp.arange(C)[None, :] < cc[:, None])[..., None]  # (M, C, 1)
+    n_b = cc.astype(chunk.dtype)
+    n_b_safe = jnp.maximum(n_b, 1.0)
+    valid = jnp.where(mask, chunk, 0.0)
+    mean_b = jnp.sum(valid, axis=1) / n_b_safe[:, None]  # (M, d)
+    cent = jnp.where(mask, chunk - mean_b[:, None, :], 0.0)
+    m2_b = jnp.einsum("mci,mcj->mij", cent, cent)  # (M, d, d)
+
+    n_a = state.count
+    n = n_a + n_b
+    n_safe = jnp.maximum(n, 1.0)
+    delta = mean_b - state.mean
+    mean = state.mean + delta * (n_b / n_safe)[:, None]
+    m2 = state.m2 + m2_b + jnp.einsum("mi,mj->mij", delta, delta) * (
+        n_a * n_b / n_safe
+    )[:, None, None]
+    # machines contributing nothing this chunk keep their state untouched
+    upd = (n_b > 0)[:, None]
+    return OnlineMoments(
+        count=n,
+        mean=jnp.where(upd, mean, state.mean),
+        m2=jnp.where(upd[..., None], m2, state.m2),
+    )
+
+
 def online_product(state: OnlineMoments, *, jitter: float = 1e-8) -> GaussianMoments:
     """Current parametric product estimate from streaming moments."""
     d = state.mean.shape[-1]
     denom = jnp.maximum(state.count - 1.0, 1.0)[:, None, None]
     covs = state.m2 / denom + jitter * jnp.eye(d)
     return product_moments(state.mean, covs)
+
+
+def _finalize(
+    key: jax.Array,
+    state: OnlineMoments,
+    n_draws: int,
+    *,
+    jitter: float = 1e-8,
+    **_ignored,
+) -> CombineResult:
+    prod = online_product(state, jitter=jitter)
+    draws = sample_gaussian(key, prod, n_draws)
+    return CombineResult(samples=draws, acceptance_rate=jnp.ones(()), moments=prod)
+
+
+ONLINE_STREAMING = StreamingCombiner(
+    init=online_init, update=online_update_chunk, finalize=_finalize
+)
+
+
+@register("online", "online_parametric", streaming=ONLINE_STREAMING)
+def online(
+    key: jax.Array,
+    samples: jnp.ndarray,
+    n_draws: int,
+    *,
+    counts: Optional[jnp.ndarray] = None,
+    jitter: float = 1e-8,
+    **_ignored,
+) -> CombineResult:
+    """Batch face of the streaming moments: one whole-stack chunk update."""
+    counts = counts_or_full(samples, counts)
+    M, _, d = samples.shape
+    state = online_update_chunk(online_init(M, d, samples.dtype), samples, counts)
+    return _finalize(key, state, n_draws, jitter=jitter)

@@ -1,0 +1,146 @@
+"""Native streaming implementations for the core combiners (paper §4).
+
+Attached to the registry via :func:`~repro.core.combiners.api.register_streaming`
+(the ``online`` combiner attaches its own through ``register(streaming=)`` in
+:mod:`repro.core.combiners.online`):
+
+``parametric``
+    State = the draw buffer **plus** Welford running moments
+    (:class:`~repro.core.combiners.online.OnlineMoments`). ``finalize``
+    replays the batch parametric combiner on the buffer — **bitwise** the
+    gather-then-combine result — while ``estimate`` samples the product of
+    the streaming moments in O(d²), the cheap per-chunk trajectory point.
+
+``pool`` / ``subpost_average``
+    The union *is* the accumulated buffer, so the exact buffered adapter is
+    already their natural streaming form (bitwise finalize).
+
+``nonparametric``
+    Chunk updates accumulate the per-machine KDE state — the mixture
+    centers and valid counts each machine's ``p̂_m`` is built from —
+    and ``finalize`` runs the full IMG chain (Algorithm 1) against it:
+    bitwise the batch combiner on the same gathered stack. ``estimate``
+    runs a short *batched* IMG (``n_batch`` floored at 8) so mid-stream
+    trajectory points cost ~1/8 the serial scan length.
+
+Every other registered combiner streams through the generic buffered
+fallback of :func:`~repro.core.combiners.api.get_streaming_combiner`.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.core.combiners.api import (
+    BufferState,
+    CombineResult,
+    StreamingCombiner,
+    buffer_append,
+    buffer_init,
+    buffered_streaming,
+    register_streaming,
+)
+from repro.core.combiners.baselines import pool_combiner, subpost_average_combiner
+from repro.core.combiners.img import nonparametric
+from repro.core.combiners.online import (
+    OnlineMoments,
+    online_init,
+    online_update_chunk,
+)
+from repro.core.combiners.online import _finalize as _online_finalize
+from repro.core.combiners.parametric import parametric
+
+
+# ---------------------------------------------------------------------------
+# parametric: exact buffered finalize + O(d²) Welford trajectory estimates
+# ---------------------------------------------------------------------------
+
+
+class ParametricStreamState(NamedTuple):
+    buffer: BufferState
+    moments: OnlineMoments
+
+
+_PARAMETRIC_BUFFERED = buffered_streaming(parametric)
+
+
+def _parametric_init(M: int, d: int) -> ParametricStreamState:
+    return ParametricStreamState(buffer_init(M, d), online_init(M, d))
+
+
+def _parametric_update(state, chunk, chunk_counts=None) -> ParametricStreamState:
+    return ParametricStreamState(
+        buffer=buffer_append(state.buffer, chunk, chunk_counts),
+        moments=online_update_chunk(state.moments, chunk, chunk_counts),
+    )
+
+
+def _parametric_finalize(key, state, n_draws, **options) -> CombineResult:
+    # one option-filtering convention for batch and stream alike: delegate
+    # to the buffered adapter, which replays the batch combiner exactly
+    return _PARAMETRIC_BUFFERED.finalize(key, state.buffer, n_draws, **options)
+
+
+def _parametric_estimate(
+    key, state, n_draws, *, jitter: float = 1e-8, **_ignored
+) -> CombineResult:
+    return _online_finalize(key, state.moments, n_draws, jitter=jitter)
+
+
+PARAMETRIC_STREAMING = register_streaming(
+    "parametric",
+    StreamingCombiner(
+        init=_parametric_init,
+        update=_parametric_update,
+        finalize=_parametric_finalize,
+        estimate=_parametric_estimate,
+    ),
+)
+
+
+# ---------------------------------------------------------------------------
+# pool / subpostAvg: the buffered adapter IS the streaming form (exact).
+# Their finalize is elementwise-cheap (a gather/mean over the buffer), so it
+# doubles as the mid-stream estimate — unlike the generic fallback, which
+# deliberately leaves `estimate=None` so trajectory consumers don't re-run
+# heavy combiners (weierstrass, rpt, ...) on the growing buffer every chunk.
+# ---------------------------------------------------------------------------
+
+
+def _with_cheap_estimate(sc: StreamingCombiner) -> StreamingCombiner:
+    return sc._replace(estimate=sc.finalize)
+
+
+POOL_STREAMING = register_streaming(
+    "pool", _with_cheap_estimate(buffered_streaming(pool_combiner))
+)
+SUBPOST_AVERAGE_STREAMING = register_streaming(
+    "subpost_average",
+    _with_cheap_estimate(buffered_streaming(subpost_average_combiner)),
+)
+
+
+# ---------------------------------------------------------------------------
+# nonparametric: accumulated per-machine KDE state + batched-IMG estimates
+# ---------------------------------------------------------------------------
+
+_NONPARAMETRIC_BUFFERED = buffered_streaming(nonparametric)
+
+
+def _nonparametric_estimate(key, state, n_draws, **options) -> CombineResult:
+    # mid-stream snapshots ride the vmapped index chains: same stationary
+    # distribution per chain (see img.run_img), ~1/n_batch the scan length
+    opts = dict(options)
+    opts["n_batch"] = max(int(opts.get("n_batch", 1) or 1), 8)
+    return _NONPARAMETRIC_BUFFERED.finalize(key, state, n_draws, **opts)
+
+
+NONPARAMETRIC_STREAMING = register_streaming(
+    "nonparametric",
+    StreamingCombiner(
+        init=buffer_init,
+        update=buffer_append,
+        finalize=_NONPARAMETRIC_BUFFERED.finalize,
+        estimate=_nonparametric_estimate,
+    ),
+)

@@ -396,7 +396,11 @@ def combine_gathered(
 
 
 def gather_subset_samples(
-    params: PyTree, paths: Sequence[str] | None = None, *, history: bool = False
+    params: PyTree = None,
+    paths: Sequence[str] | None = None,
+    *,
+    history: bool = False,
+    chunk: Optional[Sequence[PyTree]] = None,
 ) -> jnp.ndarray:
     """Flatten a designated low-dim θ subset per chain → ``(C, d_sub)``.
 
@@ -404,7 +408,33 @@ def gather_subset_samples(
     exact (IMG) combiners require a ``(M, T, d_sub)`` history, not a single
     snapshot — ``history=True`` returns ``(C, 1, d_sub)`` (the documented
     ``samples[:, None, :]`` adapter), and per-step snapshots accumulate into
-    the full layout with :func:`stack_subset_history`."""
+    the full layout with :func:`stack_subset_history`.
+
+    ``chunk=`` is the streaming gather: pass a *window* of per-step stacked
+    params (e.g. the last k post-burn-in states) and get the dense
+    ``(C, k, d_sub)`` device slice back — exactly one
+    ``StreamingCombiner.update`` chunk (see :func:`combine_stream`), so the
+    driver folds windows as they land rather than stacking the history
+    itself. Whether the *combiner* then holds the full ``(C, T, d_sub)``
+    stack depends on its streaming state: ``online`` keeps O(d²) moments
+    only; the buffered implementations re-accumulate the stack (their win
+    is per-chunk trajectory + bitwise finals, not memory). Per-chain slices
+    are concatenated host-side; no collective is ever emitted across the
+    chain axes (the sampling step's HLO stays assertable collective-free,
+    exactly as before)."""
+    if chunk is not None:
+        if params is not None:
+            raise ValueError(
+                "pass either one stacked params pytree or chunk= (a window "
+                "of them), not both"
+            )
+        if len(chunk) == 0:
+            raise ValueError("chunk= needs at least one per-step snapshot")
+        return jnp.stack(
+            [gather_subset_samples(p, paths) for p in chunk], axis=1
+        )
+    if params is None:
+        raise ValueError("gather_subset_samples needs params (or chunk=)")
     flat, _ = jax.tree_util.tree_flatten_with_path(params)
     sel = []
     for path, leaf in flat:
@@ -425,6 +455,44 @@ def gather_subset_samples(
         jnp.concatenate([s.reshape(C, -1).astype(jnp.float32) for s in sel], axis=1)
     )
     return out[:, None, :] if history else out
+
+
+def combine_stream(
+    key: jax.Array,
+    chunks,
+    n_draws: int,
+    *,
+    combiner: str = "nonparametric",
+    **options,
+):
+    """Streaming counterpart of :func:`combine_gathered`.
+
+    Folds an iterable of dense ``(M, C, d_sub)`` chunks — e.g. successive
+    ``gather_subset_samples(chunk=window)`` slices — through the registry's
+    :class:`~repro.core.combiners.api.StreamingCombiner` for ``combiner``
+    and finalizes. For the buffered implementations the result is bitwise
+    :func:`combine_gathered` on the concatenated stack; for ``online`` the
+    full history is never materialized at all. Options follow the same
+    per-signature filtering convention as the batch path.
+    """
+    from repro.core.combiners import filter_options, get_streaming_combiner
+
+    sc = get_streaming_combiner(combiner)
+    state = None
+    for ch in chunks:
+        if ch.ndim != 3:
+            raise ValueError(
+                f"combine_stream folds (M, C, d_sub) chunks, got {ch.shape}; "
+                "use gather_subset_samples(chunk=window) to build them"
+            )
+        if state is None:
+            state = sc.init(ch.shape[0], ch.shape[2])
+        state = sc.update(state, ch)
+    if state is None:
+        raise ValueError("combine_stream needs at least one chunk")
+    return sc.finalize(
+        key, state, n_draws, **filter_options(sc.finalize, options)
+    )
 
 
 def stack_subset_history(snapshots: Sequence[jnp.ndarray]) -> jnp.ndarray:

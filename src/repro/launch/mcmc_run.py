@@ -86,6 +86,7 @@ def build_spec(args: argparse.Namespace) -> RunSpec:
         n=args.n,
         seed=args.seed,
         groundtruth_T=args.groundtruth_samples,
+        stream_every=args.stream_every,
         combiner_options={"n_batch": args.img_batch},
     )
 
@@ -132,6 +133,11 @@ def main(argv=None) -> dict:
         "--checkpoint-every", type=int, default=0,
         help="draws per sampling checkpoint (with --checkpoint-dir; 0 = at end)",
     )
+    ap.add_argument(
+        "--stream-every", type=int, default=0,
+        help="combine-while-sampling: fold every N landed draws into the "
+        "streaming combiners and print the scoreboard trajectory (0 = off)",
+    )
     args = ap.parse_args(argv)
 
     pipe = Pipeline(
@@ -139,6 +145,21 @@ def main(argv=None) -> dict:
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every,
     )
+    if args.stream_every > 0:
+        sr = pipe.stream_combine()
+        first = sr.trajectory[0] if sr.trajectory else None
+        if first is not None:
+            print(
+                f"streaming: first {sr.metric} estimate "
+                f"({first['combiner']}, t={first['t']}) after "
+                f"{first['elapsed_s']:.1f}s; "
+                f"{len(sr.trajectory)} trajectory points over "
+                f"{sr.t_done}/{sr.total} draws"
+            )
+        for row in sr.trajectory:
+            err = "  -  " if row["error"] is None else f"{row['error']:.4f}"
+            print(f"  t={row['t']:6d} {sr.metric}({row['combiner']:15s}) = {err}"
+                  f"  [{row['elapsed_s']:.1f}s]")
     board = pipe.run()
 
     checked = (

@@ -89,6 +89,7 @@ def gibbs_blocks(
     n_blocks: int = 2,
     tau: float = 3.0,
     noise_std: float = 1.0,
+    count=None,
 ):
     """Exact block-Gaussian Gibbs sweeps over β.
 
@@ -97,11 +98,24 @@ def gibbs_blocks(
     conditional β_S | β_₋S ~ N(A_SS⁻¹ (b_S − A_{S,₋S} β_₋S), A_SS⁻¹).
     Per-block Cholesky factors are precomputed from the shard (A is data,
     not state), leaving each sweep two triangular solves per block.
+
+    ``count`` masks the edge-pad convention's replicated tail rows out of
+    the sufficient statistics: with the 0/1 row weight w (wᵀw = w), the
+    masked Gram is (w∘X)ᵀX and the masked shift (w∘X)ᵀy, so A and b are
+    exactly those of the shard's first ``count`` real rows — the Gibbs
+    counterpart of ``make_subposterior_logpdf(count=...)``. ``count=None``
+    (or a count covering every row — w ≡ 1.0 multiplies exactly) leaves the
+    statistics bit-identical to the unmasked path.
     """
     x, y = data["x"], data["y"]
     d = x.shape[1]
-    A = jnp.eye(d) / (num_shards * tau**2) + (x.T @ x) / noise_std**2
-    b = x.T @ y / noise_std**2
+    if count is None:
+        xw = x
+    else:
+        w = (jnp.arange(x.shape[0]) < count).astype(x.dtype)
+        xw = x * w[:, None]
+    A = jnp.eye(d) / (num_shards * tau**2) + (xw.T @ x) / noise_std**2
+    b = xw.T @ y / noise_std**2
     bounds = [(i * d) // n_blocks for i in range(n_blocks)] + [d]
 
     def block_update(s0: int, s1: int):
@@ -134,12 +148,13 @@ registry.register_model(
         default_n=10_000,
         default_sampler="mala",
         # conjugate exact-conditional blocks: step_size is accepted for
-        # registry-signature uniformity and ignored (no MH moves here)
-        gibbs_blocks=lambda shard, num_shards, *, step_size=0.1: gibbs_blocks(
-            shard, num_shards
-        ),
+        # registry-signature uniformity and ignored (no MH moves here);
+        # count masks edge-padded rows so ragged shards sample exactly
+        gibbs_blocks=lambda shard, num_shards, *, step_size=0.1, count=None:
+            gibbs_blocks(shard, num_shards, count=count),
         gibbs_init=gibbs_init,
         gibbs_extract=lambda positions: positions,
+        gibbs_counts=True,
     ),
     "linear_gaussian",
 )

@@ -20,6 +20,10 @@ partition → sample → combine → score — without per-model branching:
   ``gibbs_init(key, shard)`` for the extended position pytree, and
   ``gibbs_extract(positions)`` projecting stacked positions back to the
   shared ``(T, d)`` θ — latents stay shard-local, exactly as §8.3 requires.
+  ``gibbs_counts=True`` declares that ``gibbs_blocks`` additionally accepts
+  ``count=`` (the edge-pad valid-prefix convention) and masks the padded
+  replicated rows out of its conditionals — such models run ``--sampler
+  gibbs`` on non-divisible N; models without it keep requiring divisible N.
 
 Models self-register at import time via :func:`register_model` (importing
 :mod:`repro.models.bayes` populates the registry); consumers resolve them by
@@ -55,6 +59,7 @@ class BayesModel:
     gibbs_blocks: Optional[Callable[..., Any]] = None
     gibbs_init: Optional[Callable[[jax.Array, Data], PyTree]] = None
     gibbs_extract: Optional[Callable[[PyTree], jnp.ndarray]] = None
+    gibbs_counts: bool = False  # gibbs_blocks masks padded rows via count=
 
     def initial_position(self, key: jax.Array, data_shard: Data) -> jnp.ndarray:
         """θ0 for one chain: model-provided init or jittered origin."""

@@ -1,0 +1,456 @@
+"""Streaming combination engine: combiner-level update*k+finalize ≡ batch,
+the Pipeline combine-while-sampling stage (scoreboard parity, trajectory,
+interrupt→resume), the RunSpec sweep grammar, the masked linear-Gaussian
+Gibbs blocks (ragged N), and the mesh chunked gather / combine_stream."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Pipeline, RunSpec
+from repro.core.combiners import (
+    buffer_append,
+    buffer_init,
+    filter_options,
+    get_combiner,
+    get_streaming_combiner,
+    online_update_chunk,
+    streaming_combiners,
+)
+from repro.core.combiners.online import online_init
+
+M, T, D = 4, 120, 3
+
+
+@pytest.fixture(scope="module")
+def cloud():
+    key = jax.random.PRNGKey(0)
+    return 0.4 * jax.random.normal(key, (M, T, D)) + jax.random.normal(
+        jax.random.fold_in(key, 1), (M, 1, D)
+    )
+
+
+def _stream(name, samples, chunk=40, n_draws=64, **options):
+    sc = get_streaming_combiner(name)
+    state = sc.init(samples.shape[0], samples.shape[2])
+    for t0 in range(0, samples.shape[1], chunk):
+        state = sc.update(state, samples[:, t0 : t0 + chunk])
+    return sc.finalize(
+        jax.random.PRNGKey(7), state, n_draws,
+        **filter_options(sc.finalize, options),
+    )
+
+
+# ---------------------------------------------------------------------------
+# combiner layer: the StreamingCombiner protocol
+# ---------------------------------------------------------------------------
+
+
+def test_native_streaming_implementations_are_registered():
+    assert {"parametric", "pool", "subpost_average", "nonparametric", "online"} \
+        <= set(streaming_combiners())
+    # every OTHER registered name still resolves (buffered fallback)
+    assert get_streaming_combiner("consensus") is not None
+    with pytest.raises(KeyError, match="unknown combiner"):
+        get_streaming_combiner("no_such_combiner")
+
+
+@pytest.mark.parametrize(
+    "name",
+    ["parametric", "pool", "subpost_average", "nonparametric",
+     "consensus", "weierstrass"],  # last two exercise the generic fallback
+)
+def test_streaming_updates_then_finalize_is_bitwise_batch(cloud, name):
+    """The exact contract: update*k + finalize ≡ the batch combiner on the
+    gathered stack, bitwise (same arrays, same key, same option filter)."""
+    fin = _stream(name, cloud, rescale=True, n_batch=1)
+    fn = get_combiner(name)
+    ref = fn(
+        jax.random.PRNGKey(7), cloud, 64,
+        **filter_options(fn, dict(rescale=True, n_batch=1)),
+    )
+    assert bool(jnp.all(fin.samples == ref.samples)), name
+    assert fin.samples.shape == ref.samples.shape
+
+
+def test_online_combiner_on_the_registry(cloud):
+    """Satellite: --combiner online works outside streaming mode — the batch
+    entry point wraps init/update/product and matches parametric moments."""
+    res = get_combiner("online")(jax.random.PRNGKey(2), cloud, 64)
+    assert res.samples.shape == (64, D)
+    assert res.moments is not None
+    par = get_combiner("parametric")(jax.random.PRNGKey(2), cloud, 64)
+    np.testing.assert_allclose(
+        np.asarray(res.moments.mean), np.asarray(par.moments.mean), atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.moments.cov), np.asarray(par.moments.cov), atol=1e-4
+    )
+
+
+def test_online_streamed_matches_batch_to_merge_rounding(cloud):
+    """Chunked Welford merges reassociate the same sums — the streamed
+    online result must agree with its batch face to documented tolerance
+    (not bitwise: that guarantee belongs to the buffered combiners)."""
+    fin = _stream("online", cloud)
+    ref = get_combiner("online")(jax.random.PRNGKey(7), cloud, 64)
+    np.testing.assert_allclose(
+        np.asarray(fin.moments.mean), np.asarray(ref.moments.mean),
+        rtol=1e-4, atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        np.asarray(fin.samples), np.asarray(ref.samples), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_online_chunk_update_masks_garbage_rows(cloud):
+    """chunk_counts' invalid rows may hold NaN — where-based masking must
+    keep them out of the moments entirely."""
+    chunk = cloud[:, :40].at[:, 30:].set(jnp.nan)
+    counts = jnp.full((M,), 30, jnp.int32)
+    state = online_update_chunk(online_init(M, D), chunk, counts)
+    ref = online_update_chunk(online_init(M, D), cloud[:, :30])
+    assert bool(jnp.all(jnp.isfinite(state.mean)))
+    np.testing.assert_allclose(
+        np.asarray(state.mean), np.asarray(ref.mean), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(state.m2), np.asarray(ref.m2), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_buffer_append_compacts_ragged_chunks(cloud):
+    """A mid-stream ragged chunk must keep every chain's valid draws a
+    prefix (the combiners' layout contract), not leave holes."""
+    c1, c2 = cloud[:, :40], cloud[:, 40:80]
+    cc1 = jnp.asarray([40, 30, 40, 20], jnp.int32)
+    state = buffer_append(buffer_init(M, D), c1, cc1)
+    state = buffer_append(state, c2)
+    np.testing.assert_array_equal(np.asarray(state.counts), [80, 70, 80, 60])
+    for m, c in enumerate([40, 30, 40, 20]):
+        got = np.asarray(state.theta[m, : c + 40])
+        want = np.concatenate([np.asarray(c1[m, :c]), np.asarray(c2[m])])
+        np.testing.assert_array_equal(got, want)
+
+
+def test_streaming_finalize_before_update_raises():
+    sc = get_streaming_combiner("pool")
+    with pytest.raises(ValueError, match="before any update"):
+        sc.finalize(jax.random.PRNGKey(0), sc.init(M, D), 16)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline.stream_combine: combine-while-sampling
+# ---------------------------------------------------------------------------
+
+# the acceptance grid: 2 models × (parametric, pool bitwise; nonparametric
+# documented-tolerance — in practice also bitwise, same buffer + key)
+STREAM_SPECS = {
+    "linear": RunSpec(
+        model="linear", M=4, T=60, warmup=30, n=512, seed=3,
+        groundtruth_T=120, combiner=("parametric", "pool", "nonparametric"),
+        score_metric="logl2", stream_every=20,
+    ),
+    "poisson": RunSpec(
+        model="poisson", sampler="rwmh", M=4, T=60, warmup=30, n=400, seed=5,
+        groundtruth_T=120, combiner=("parametric", "pool", "nonparametric"),
+        stream_every=20,
+    ),
+}
+
+
+@pytest.fixture(scope="module", params=sorted(STREAM_SPECS))
+def streamed(request):
+    spec = STREAM_SPECS[request.param]
+    pipe = Pipeline(spec)
+    return spec, pipe, pipe.stream_combine(n_estimate=32)
+
+
+def test_stream_combine_final_scoreboard_matches_gather(streamed):
+    """Acceptance criterion: the streamed finals equal the gather-then-
+    combine path — bitwise for parametric/pool (and the buffered
+    nonparametric), same scoreboard errors."""
+    spec, pipe, sr = streamed
+    assert sr.complete and sr.t_done == spec.T
+    gather = Pipeline(spec)
+    combined = gather.combine()
+    for name in ("parametric", "pool", "nonparametric"):
+        assert bool(
+            jnp.all(sr.combined[name].samples == combined[name].samples)
+        ), name
+    assert pipe.score().errors == gather.score().errors
+
+
+def test_stream_trajectory_shape_and_monotone_t(streamed):
+    """Trajectory smoke: one row per (chunk, combiner), strictly growing t,
+    finite errors, and the estimates sane enough that the best trajectory
+    error is within reach of the final one."""
+    spec, pipe, sr = streamed
+    names = spec.combiner_names()
+    assert len(sr.trajectory) == (spec.T // spec.stream_every) * len(names)
+    per_name = {n: [r for r in sr.trajectory if r["combiner"] == n] for n in names}
+    board = pipe.score().errors
+    for name, rows in per_name.items():
+        ts = [r["t"] for r in rows]
+        assert ts == sorted(ts) and len(set(ts)) == len(ts)  # monotone chunks
+        assert ts[-1] == spec.T
+        errs = [r["error"] for r in rows]
+        assert all(np.isfinite(e) for e in errs), name
+        # the stream must be converging toward the batch answer, not
+        # wandering: its best estimate isn't wildly above the final error
+        assert min(errs) < 4.0 * abs(board[name]) + 4.0, (name, errs)
+    assert all(r["elapsed_s"] >= 0 for r in sr.trajectory)
+
+
+def test_fallback_combiners_fold_but_skip_mid_stream_rows(streamed):
+    """A combiner streamed through the generic buffered fallback (no cheap
+    estimate) must still finalize bitwise-batch, but not re-run its heavy
+    batch body on the growing buffer at every chunk boundary."""
+    spec, _, _ = streamed
+    pipe = Pipeline(spec)
+    sr = pipe.stream_combine(names=("consensus",), n_estimate=16)
+    assert sr.trajectory == []  # folds every chunk, estimates none
+    from repro.api.pipeline import combine_spec_draws
+
+    ref = combine_spec_draws(
+        spec, jax.random.PRNGKey(spec.seed), pipe.sample().theta,
+        names=("consensus",),
+    )["consensus"]
+    assert bool(jnp.all(sr.combined["consensus"].samples == ref.samples))
+
+
+def test_stream_combine_requires_a_cadence():
+    spec = dataclasses.replace(STREAM_SPECS["linear"], stream_every=0)
+    with pytest.raises(ValueError, match="stream_every"):
+        Pipeline(spec).stream_combine()
+
+
+def test_stream_combine_after_sample_replays_cached_draws(streamed):
+    """stream_combine on a pipeline whose sampling already ran must replay
+    the cached draws at the stream cadence — identical trajectory."""
+    spec, _, sr = streamed
+    pipe = Pipeline(spec)
+    pipe.sample()
+    sr2 = pipe.stream_combine(n_estimate=32)
+    assert [r["error"] for r in sr2.trajectory] == [
+        r["error"] for r in sr.trajectory
+    ]
+    for name in sr.combined:
+        assert bool(jnp.all(sr2.combined[name].samples == sr.combined[name].samples))
+
+
+def test_stream_interrupt_resume_reproduces_scoreboard(tmp_path):
+    """Satellite: a streaming run interrupted at a chunk boundary and
+    resumed in a fresh Pipeline reproduces the uninterrupted streaming
+    scoreboard — trajectory and finals."""
+    spec = STREAM_SPECS["linear"]
+    ref = Pipeline(
+        spec, checkpoint_dir=tmp_path / "ref", checkpoint_every=20
+    ).stream_combine(n_estimate=32)
+
+    p1 = Pipeline(spec, checkpoint_dir=tmp_path / "run", checkpoint_every=20)
+    partial = p1.stream_combine(n_estimate=32, max_steps=20)
+    assert not partial.complete and partial.t_done == 20
+    assert partial.combined == {}  # nothing finalized mid-flight
+    assert len(partial.trajectory) == len(spec.combiner_names())
+
+    p2 = Pipeline(spec, checkpoint_dir=tmp_path / "run", checkpoint_every=20)
+    full = p2.stream_combine(n_estimate=32)
+    assert full.complete
+    assert [
+        (r["t"], r["combiner"], r["error"]) for r in full.trajectory
+    ] == [(r["t"], r["combiner"], r["error"]) for r in ref.trajectory]
+    for name in ref.combined:
+        assert bool(
+            jnp.all(full.combined[name].samples == ref.combined[name].samples)
+        ), name
+
+
+def test_stream_checkpoint_cadence_must_align(tmp_path):
+    spec = STREAM_SPECS["linear"]  # stream_every=20
+    with pytest.raises(ValueError, match="multiple of"):
+        Pipeline(spec, checkpoint_dir=tmp_path, checkpoint_every=30).sample()
+
+
+def test_max_steps_budget_is_durable_with_finer_stream_chunks(tmp_path):
+    """Regression: with stream_every < checkpoint_every, a max_steps budget
+    smaller than the SAVE cadence could sample a chunk and persist nothing
+    (silently lost work) — it must raise instead, and a budget that crosses
+    a save boundary must actually land a checkpoint there."""
+    from repro.checkpoint import latest_step
+
+    spec = STREAM_SPECS["linear"]  # stream_every=20
+    p = Pipeline(spec, checkpoint_dir=tmp_path, checkpoint_every=40)
+    with pytest.raises(ValueError, match="durable progress"):
+        p.sample(max_steps=20)  # >= chunk (20) but < checkpoint_every (40)
+    partial = p.sample(max_steps=50)  # rounds down to the save boundary
+    assert partial.t_done == 40
+    assert latest_step(tmp_path) == 40  # the budgeted work is durable
+
+
+def test_mesh_specs_reject_streaming():
+    spec = dataclasses.replace(STREAM_SPECS["linear"], mesh_shape=(4, 1))
+    with pytest.raises(ValueError, match="vmap"):
+        Pipeline(spec).stream_combine()
+
+
+# ---------------------------------------------------------------------------
+# RunSpec.sweep grammar
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_outer_product_and_shared_signatures():
+    base = RunSpec(model="linear", sampler="mala", combiner="parametric",
+                   M=4, T=40, warmup=10, n=256)
+    specs = base.sweep(seed=range(4), step_size=[0.1, 0.2])
+    assert len(specs) == 8
+    assert len({s.spec_id for s in specs}) == 8
+    assert [s.seed for s in specs[:2]] == [0, 0]  # last axis varies fastest
+    # seeds and step sizes are runtime inputs: ONE executable signature
+    assert len({s.executable_signature() for s in specs}) == 1
+    # combiner axes accept names and tuples alike, still one signature
+    both = base.sweep(combiner=["parametric", ("pool", "nonparametric")])
+    assert both[0].combiner == "parametric"
+    assert both[1].combiner == ("pool", "nonparametric")
+    assert len({s.executable_signature() for s in both}) == 1
+
+
+def test_sweep_validates_axes():
+    base = RunSpec(model="linear")
+    assert base.sweep() == [base]
+    with pytest.raises(ValueError, match="not a RunSpec field"):
+        base.sweep(bogus=[1])
+    with pytest.raises(TypeError, match="iterable of field values"):
+        base.sweep(combiner="parametric")
+    with pytest.raises(ValueError, match="empty"):
+        base.sweep(seed=[])
+    with pytest.raises(KeyError, match="unknown model"):
+        base.sweep(model=["linear", "nope"])
+
+
+def test_sweep_feeds_run_matrix(tmp_path):
+    from repro.api import run_matrix
+
+    specs = RunSpec(
+        model="linear", sampler="mala", combiner="parametric", M=4, T=30,
+        warmup=10, n=256, groundtruth_T=60, score_metric="logl2",
+    ).sweep(seed=range(2))
+    res = run_matrix(specs, json_path=str(tmp_path / "sweep.json"))
+    assert res.n_specs == 2
+    assert res.n_executables == 1
+    assert all(np.isfinite(r["error"]) for r in res.rows)
+
+
+# ---------------------------------------------------------------------------
+# masked linear-Gaussian Gibbs (ragged N)
+# ---------------------------------------------------------------------------
+
+
+def test_linear_gibbs_masked_blocks_identity_and_closed_form():
+    from repro.models.bayes import linear_gaussian as lg
+    from repro.samplers import get_sampler
+    from repro.samplers.base import run_chain
+
+    key = jax.random.PRNGKey(0)
+    data, _ = lg.generate_data(key, 200, 6)
+    z0 = jnp.zeros(6)
+    gibbs = get_sampler("gibbs")
+
+    # identity: a count covering every row multiplies by w ≡ 1.0 — the
+    # sufficient statistics (and hence the chain) are bitwise the unmasked
+    # path's on the same keys
+    k_run = jax.random.fold_in(key, 1)
+    plain = get_sampler("gibbs")(None, block_updates=lg.gibbs_blocks(data, 4))
+    masked = gibbs(None, block_updates=lg.gibbs_blocks(data, 4, count=200))
+    pa, _ = jax.jit(lambda k: run_chain(k, plain, z0, 50))(k_run)
+    pb, _ = jax.jit(lambda k: run_chain(k, masked, z0, 50))(k_run)
+    assert bool(jnp.all(pa == pb))
+
+    # exactness: an edge-padded shard with count masks down to exactly the
+    # real rows' closed-form subposterior
+    real = {"x": data["x"][:150], "y": data["y"][:150]}
+    pad = {
+        "x": jnp.concatenate([real["x"], jnp.tile(real["x"][-1:], (50, 1))]),
+        "y": jnp.concatenate([real["y"], jnp.tile(real["y"][-1:], 50)]),
+    }
+    post = lg.subposterior_moments(real, 4)
+    kern = gibbs(None, block_updates=lg.gibbs_blocks(pad, 4, count=150))
+    pm, _ = jax.jit(lambda k: run_chain(k, kern, z0, 3000, burn_in=200))(
+        jax.random.fold_in(key, 2)
+    )
+    err = float(jnp.linalg.norm(pm.mean(0) - post.mean))
+    assert err < 0.05 * float(jnp.linalg.norm(post.mean))
+
+
+def test_pipeline_linear_gibbs_accepts_non_divisible_n():
+    """Satellite: --sampler gibbs no longer rejects ragged counts for models
+    that mask (510 = 4·127 + 2 ⇒ edge-padded shards), and the padded run
+    matches an unpadded divisible run's scoreboard scale."""
+    ragged = RunSpec(
+        model="linear", sampler="gibbs", M=4, T=40, warmup=0, n=510, seed=1,
+        groundtruth_T=80, combiner=("parametric",), score_metric="logl2",
+    )
+    board = Pipeline(ragged).run()
+    assert all(np.isfinite(v) for v in board.errors.values())
+    divisible = dataclasses.replace(ragged, n=512)
+    board2 = Pipeline(divisible).run()
+    # same scenario up to 2 rows of data: scoreboards on the same scale
+    for name in board.errors:
+        assert abs(board.errors[name] - board2.errors[name]) < 3.0
+
+
+def test_poisson_gibbs_still_rejects_ragged_counts():
+    spec = RunSpec(
+        model="poisson", sampler="gibbs", M=4, T=20, warmup=0, n=402, seed=1,
+        groundtruth_T=40, combiner=("parametric",),
+    )
+    with pytest.raises(ValueError, match="cannot mask padded rows"):
+        Pipeline(spec).sample()
+
+
+# ---------------------------------------------------------------------------
+# mesh layer: chunked gather + combine_stream
+# ---------------------------------------------------------------------------
+
+
+def test_gather_subset_samples_chunk_and_combine_stream():
+    from repro.distributed.epmcmc import (
+        combine_gathered,
+        combine_stream,
+        gather_subset_samples,
+        stack_subset_history,
+    )
+
+    key = jax.random.PRNGKey(9)
+    C, d_sub, steps = 4, 3, 12
+    snaps = [
+        {"final_norm": jax.random.normal(jax.random.fold_in(key, t), (C, d_sub))}
+        for t in range(steps)
+    ]
+    # chunked gather: windows of per-step stacked params → (C, k, d_sub)
+    win = gather_subset_samples(chunk=snaps[:4])
+    assert win.shape == (C, 4, d_sub)
+    np.testing.assert_array_equal(
+        np.asarray(win),
+        np.asarray(stack_subset_history(
+            [gather_subset_samples(p) for p in snaps[:4]]
+        )),
+    )
+    with pytest.raises(ValueError, match="at least one"):
+        gather_subset_samples(chunk=[])
+    with pytest.raises(ValueError, match="not both"):
+        gather_subset_samples(snaps[0], chunk=snaps[:2])
+
+    # combine_stream over windows ≡ combine_gathered on the full stack
+    chunks = [gather_subset_samples(chunk=snaps[i : i + 4]) for i in (0, 4, 8)]
+    full = jnp.concatenate(chunks, axis=1)
+    got = combine_stream(jax.random.PRNGKey(1), chunks, 32, combiner="parametric")
+    want = combine_gathered(jax.random.PRNGKey(1), full, 32, combiner="parametric")
+    assert bool(jnp.all(got.samples == want.samples))
+    with pytest.raises(ValueError, match="at least one chunk"):
+        combine_stream(jax.random.PRNGKey(1), [], 8)
+    with pytest.raises(ValueError, match="chunks"):
+        combine_stream(jax.random.PRNGKey(1), [full[0]], 8)
