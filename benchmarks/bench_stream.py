@@ -12,8 +12,15 @@ call — a latency win that grows with T. This bench records, at M ∈ {4, 10}:
 - ``time_to_first_estimate``: wall time until the streaming path's first
   trajectory point (the acceptance criterion: strictly below the above);
 - ``stream_total``: the streaming run's time to its *final* (bitwise-equal)
-  combined result — the overlap overhead/amortization figure;
-- ``first_estimate_speedup``: gather latency / time-to-first-estimate.
+  combined result on the subscriber-driven chunked path (``fused=False``) —
+  the overlap overhead/amortization figure;
+- ``stream_total_fused``: the same run on the fused hot path (one compiled
+  sampling executable + one compiled combine-fold scan, the
+  ``stream_combine`` default when every combiner has a scan face);
+- ``first_estimate_speedup``: gather latency / time-to-first-estimate;
+- ``fused_speedup``: ``stream_total / stream_total_fused`` — the fused hot
+  path's win over the per-chunk host-loop driver (acceptance floor: ≥ 2×
+  at M=4 on CPU).
 
 Groundtruth scoring is skipped on both sides (``score=False``): the bench
 measures the sample→combine dataflow, not the reference chain. Both paths
@@ -67,10 +74,10 @@ def _gather_latency(M: int, T: int) -> float:
     return time.perf_counter() - t0
 
 
-def _stream_run(M: int, T: int, stream_every: int):
+def _stream_run(M: int, T: int, stream_every: int, fused: bool):
     pipe = Pipeline(_spec(M, T, stream_every), check_hlo=False)
     t0 = time.perf_counter()
-    sr = pipe.stream_combine(n_estimate=128, score=False)
+    sr = pipe.stream_combine(n_estimate=128, score=False, fused=fused)
     return time.perf_counter() - t0, sr
 
 
@@ -80,10 +87,12 @@ def run(full: bool = False) -> List[Row]:
     for M in (4, 10):
         stream_every = max(T // 12, 1)
         _gather_latency(M, T)  # warm (compile) both program sets
-        _stream_run(M, T, stream_every)
+        _stream_run(M, T, stream_every, fused=False)
+        _stream_run(M, T, stream_every, fused=True)
 
         t_gather = _gather_latency(M, T)
-        t_stream_total, sr = _stream_run(M, T, stream_every)
+        t_stream_total, sr = _stream_run(M, T, stream_every, fused=False)
+        t_fused_total, sf = _stream_run(M, T, stream_every, fused=True)
         t_first = sr.trajectory[0]["elapsed_s"]
 
         extra = f"model=linear T={T} stream_every={stream_every} combiner={COMBINER}"
@@ -94,8 +103,15 @@ def run(full: bool = False) -> List[Row]:
         rows.append(Row("stream", f"M={M}", "stream_total",
                         t_stream_total, "s",
                         f"{len(sr.trajectory)} trajectory points"))
+        rows.append(Row("stream", f"M={M}", "stream_total_fused",
+                        t_fused_total, "s",
+                        f"{len(sf.trajectory)} trajectory points"))
         rows.append(Row("stream", f"M={M}", "first_estimate_speedup",
                         t_gather / max(t_first, 1e-9), "x",
                         "gather latency / time-to-first-estimate"))
-        assert sr.complete and len(sr.trajectory) >= 2
+        rows.append(Row("stream", f"M={M}", "fused_speedup",
+                        t_stream_total / max(t_fused_total, 1e-9), "x",
+                        "subscriber-path stream_total / fused stream_total"))
+        assert sr.complete and sf.complete
+        assert len(sr.trajectory) >= 2 and len(sf.trajectory) >= 2
     return rows

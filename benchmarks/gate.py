@@ -1,0 +1,159 @@
+"""CI perf-regression gate over the ``perf/BENCH_*.json`` trajectory.
+
+The repo accumulates one benchmark snapshot per PR (``benchmarks.run
+--json perf/``). This gate keeps the streaming/combination hot path honest:
+it compares the newest snapshot's wall-time rows for the ``stream`` and
+``combine`` benches against the **median of the previous three** snapshots
+(per ``(bench, case, metric)``) and fails when any row regressed by more
+than 25 %.
+
+  PYTHONPATH=src python -m benchmarks.gate                 # gate newest vs history
+  PYTHONPATH=src python -m benchmarks.gate --candidate p.json
+  PYTHONPATH=src python -m benchmarks.gate --threshold 0.4 --last 5
+
+Design notes:
+
+- Only ``units == "s"`` rows gate (timings); ``x``-unit ratio rows like
+  ``fused_speedup`` are diagnostics, not gates — a ratio can legitimately
+  move when its numerator improves.
+- The baseline is a per-metric **median** over up to ``--last`` prior
+  snapshots, so one noisy CI run can't poison the reference, and a metric
+  must appear in at least one prior snapshot to gate at all (new metrics —
+  e.g. ``stream_total_fused`` on the PR that introduces it — pass
+  vacuously and start gating on the next PR).
+- CI boxes are noisy: rows faster than ``--min-seconds`` (default 30 ms)
+  are reported but never fail the gate; their jitter is scheduler noise,
+  not a code regression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from statistics import median
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+GATED_BENCHES = ("stream", "combine")
+GATED_UNITS = "s"
+
+RowKey = Tuple[str, str, str]  # (bench, case, metric)
+
+
+class Verdict(NamedTuple):
+    key: RowKey
+    value: float
+    baseline: Optional[float]  # None → no history, vacuous pass
+    ratio: Optional[float]
+    failed: bool
+
+
+def gated_rows(snapshot: dict) -> Dict[RowKey, float]:
+    """The timing rows of one snapshot that participate in the gate."""
+    out: Dict[RowKey, float] = {}
+    for row in snapshot.get("rows", []):
+        if row.get("bench") in GATED_BENCHES and row.get("units") == GATED_UNITS:
+            out[(row["bench"], row["case"], row["metric"])] = float(row["value"])
+    return out
+
+
+def baseline_of(history: Sequence[dict], key: RowKey) -> Optional[float]:
+    """Median of ``key``'s value over the snapshots that have it."""
+    vals = [gated_rows(s)[key] for s in history if key in gated_rows(s)]
+    return median(vals) if vals else None
+
+
+def evaluate(
+    candidate: dict,
+    history: Sequence[dict],
+    *,
+    threshold: float = 0.25,
+    min_seconds: float = 0.03,
+) -> List[Verdict]:
+    """Gate ``candidate`` against ``history`` (older snapshots, any order).
+
+    A row fails iff it has a baseline, its value exceeds
+    ``baseline * (1 + threshold)``, and the baseline is at least
+    ``min_seconds`` (sub-noise-floor rows never fail).
+    """
+    verdicts: List[Verdict] = []
+    for key, value in sorted(gated_rows(candidate).items()):
+        base = baseline_of(history, key)
+        ratio = (value / base) if base else None
+        failed = (
+            base is not None
+            and base >= min_seconds
+            and value > base * (1.0 + threshold)
+        )
+        verdicts.append(Verdict(key, value, base, ratio, failed))
+    return verdicts
+
+
+def load_snapshots(perf_dir: str) -> List[Tuple[str, dict]]:
+    """(path, snapshot) pairs sorted oldest→newest by filename timestamp."""
+    out = []
+    for path in sorted(glob.glob(os.path.join(perf_dir, "BENCH_*.json"))):
+        with open(path) as f:
+            out.append((path, json.load(f)))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--perf-dir", default="perf", help="snapshot directory")
+    ap.add_argument(
+        "--candidate", default=None, metavar="PATH",
+        help="snapshot to gate (default: newest BENCH_*.json in --perf-dir; "
+        "a candidate inside --perf-dir is excluded from its own baseline)",
+    )
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated slowdown fraction (default 0.25)")
+    ap.add_argument("--last", type=int, default=3,
+                    help="baseline = median of this many prior snapshots")
+    ap.add_argument("--min-seconds", type=float, default=0.03,
+                    help="rows with baselines below this never fail (noise floor)")
+    args = ap.parse_args(argv)
+
+    snapshots = load_snapshots(args.perf_dir)
+    if args.candidate:
+        with open(args.candidate) as f:
+            candidate = json.load(f)
+        cand_path = args.candidate
+        history = [s for p, s in snapshots if os.path.abspath(p) != os.path.abspath(cand_path)]
+    else:
+        if not snapshots:
+            print(f"gate: no BENCH_*.json under {args.perf_dir}; nothing to gate")
+            return 0
+        cand_path, candidate = snapshots[-1]
+        history = [s for _, s in snapshots[:-1]]
+
+    history = history[-args.last:]
+    verdicts = evaluate(
+        candidate, history, threshold=args.threshold, min_seconds=args.min_seconds
+    )
+
+    print(f"gate: {cand_path} vs median of last {len(history)} snapshot(s), "
+          f"threshold +{args.threshold:.0%}")
+    failures = 0
+    for v in verdicts:
+        bench, case, metric = v.key
+        if v.baseline is None:
+            status, detail = "  new ", "no history"
+        else:
+            status = " FAIL " if v.failed else "  ok  "
+            detail = f"baseline {v.baseline:.4f}s ratio {v.ratio:.2f}x"
+        failures += v.failed
+        print(f"[{status}] {bench}/{case}/{metric}: {v.value:.4f}s  {detail}")
+
+    if failures:
+        print(f"gate: FAILED — {failures} row(s) regressed more than "
+              f"{args.threshold:.0%} vs the rolling median")
+        return 1
+    print("gate: passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

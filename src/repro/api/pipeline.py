@@ -52,9 +52,11 @@ from repro.api.streaming import StreamChunk, stream_sample
 from repro.core import metrics
 from repro.core.subposterior import partition_data
 from repro.core.combiners import (
+    BufferState,
     CombineResult,
     filter_options,
     get_combiner,
+    get_scan_face,
     get_streaming_combiner,
 )
 from repro.models.bayes import get_model
@@ -140,7 +142,7 @@ class SubposteriorDraws(NamedTuple):
     theta: jnp.ndarray  # (M, T, d) shared-θ draws
     accept: jnp.ndarray  # (M,) mean acceptance per chain
     counts: jnp.ndarray  # (M,)
-    backend: str  # "vmap[chunked]" | "vmap[resumable]" | "shard_map(...)"
+    backend: str  # "vmap[chunked]" | "vmap[fused]" | "vmap[resumable]" | "shard_map(...)"
     collectives_checked: Optional[int]
     t_done: int  # draws collected so far (== T unless interrupted)
     complete: bool
@@ -155,7 +157,10 @@ class StreamResult(NamedTuple):
     finalize, so they contribute no rows); ``elapsed_s`` is
     wall time since the stream started (``trajectory[0]["elapsed_s"]`` is
     the time-to-first-estimate the bench tracks; on a resumed run the
-    replayed prefix carries the resume session's clock). ``combined`` holds
+    replayed prefix carries the resume session's clock; on the fused path
+    every row carries the same post-run stamp — estimates materialize
+    together when the one compiled program returns, so there is no
+    meaningful per-row clock). ``combined`` holds
     the finalized per-combiner results (empty while ``complete`` is False).
     """
 
@@ -385,6 +390,7 @@ class Pipeline:
         n_estimate: int = 128,
         max_steps: Optional[int] = None,
         score: bool = True,
+        fused: Optional[bool] = None,
     ) -> StreamResult:
         """Fold each landed sampling chunk into the streaming combiners.
 
@@ -403,6 +409,22 @@ class Pipeline:
         gather-then-combine ones for the buffered combiners (``parametric``,
         ``pool``, ``nonparametric``, every fallback) and within Welford
         merge-rounding for ``online``; :meth:`score` then reuses them.
+
+        ``fused`` selects the hot path: ``None`` (default) fuses
+        automatically when every requested combiner has a scan face
+        (:func:`repro.core.combiners.get_scan_face`) and nothing needs the
+        host between chunks (no checkpointing, no ``max_steps`` budget) —
+        sampling runs as one compiled program shared with the gather path
+        (same theta bitwise) and the combiner folds + in-scan trajectory
+        estimates run as a second compiled program over the device-resident
+        draws (:func:`repro.api.streaming.fused_fold`), zero per-chunk host
+        hops. ``fused=False`` forces the subscriber-driven path;
+        ``fused=True`` asserts fusability and raises when the run needs the
+        subscriber path. Finals are bitwise identical between the two modes
+        (same theta, same keys, same host ``finalize``); trajectory
+        estimates agree to compile-scheduling rounding, and ``online``'s
+        fused folds to Welford merge-rounding (its scan face runs the
+        Pallas ``online_update`` kernel).
 
         ``score=False`` skips the groundtruth chain and leaves trajectory
         errors ``None`` (the bench's time-to-first-estimate mode);
@@ -430,6 +452,29 @@ class Pipeline:
             name: jax.random.fold_in(kc, zlib.crc32(name.encode()) & 0x7FFFFFFF)
             for name in names
         }
+
+        faces = {name: get_scan_face(name) for name in names}
+        can_fuse = (
+            fused is not False
+            and self.checkpoint_dir is None
+            and max_steps is None
+            and all(faces[name] is not None for name in names)
+        )
+        if fused is True and not can_fuse:
+            blockers = [n for n in names if faces[n] is None]
+            raise ValueError(
+                "fused=True but this run needs the subscriber path: "
+                + (
+                    f"combiners without a scan face: {blockers}"
+                    if blockers
+                    else "checkpointing/max_steps require per-chunk host "
+                    "subscribers"
+                )
+            )
+        if can_fuse:
+            return self._stream_combine_fused(
+                names, scs, faces, k_names, options, n_estimate, score
+            )
         states: Dict[str, Any] = {name: None for name in names}
         rows: List[Dict[str, Any]] = []
         estimates: List[Tuple[int, str, jnp.ndarray]] = []
@@ -505,6 +550,109 @@ class Pipeline:
             t_done=draws.t_done,
             total=spec.T,
             complete=draws.complete,
+            metric=label,
+            stream_every=spec.stream_every,
+            n_estimate=n_estimate,
+        )
+
+    def _stream_combine_fused(
+        self,
+        names: Tuple[str, ...],
+        scs: Dict[str, Any],
+        faces: Dict[str, Any],
+        k_names: Dict[str, jax.Array],
+        options: Dict[str, Any],
+        n_estimate: int,
+        score: bool,
+    ) -> StreamResult:
+        """The fused mode of :meth:`stream_combine`: one compiled sampling
+        program (shared with the plain stage — same theta bitwise), one
+        compiled combine-fold program over the device-resident draws.
+
+        Trajectory rows land for exactly the combiners the subscriber path
+        would estimate (host ``estimate`` non-None), in the same
+        per-boundary order and from the same ``fold_in(k_name, t1)`` keys:
+        in-scan for faces shipping a scan ``estimate`` (``parametric``),
+        post-hoc on buffered prefixes of the gathered draws for the rest
+        (``pool``, ``nonparametric``, ...).
+        """
+        from repro.api.streaming import fused_fold
+
+        spec = self.spec
+        t_start = time.time()
+        draws = self.sample()  # the fused program, or the cached draws
+        theta = draws.theta
+        chunk = spec.stream_every
+        counts_T = jnp.full((spec.M,), spec.T, jnp.int32)
+
+        t0 = time.time()
+        n_full, tail = divmod(spec.T, chunk)
+        boundaries = tuple(chunk * (i + 1) for i in range(n_full)) + (
+            (spec.T,) if tail else ()
+        )
+        est_keys = {
+            name: jnp.stack(
+                [jax.random.fold_in(k_names[name], t1) for t1 in boundaries]
+            )
+            for name in names
+            if faces[name].estimate is not None and scs[name].estimate is not None
+        }
+        ff = fused_fold(
+            theta, {n: faces[n] for n in names}, est_keys, n_estimate,
+            chunk, options,
+        )
+
+        rows: List[Dict[str, Any]] = []
+        estimates: List[Tuple[int, str, jnp.ndarray]] = []
+        for i, t1 in enumerate(ff.boundaries):
+            for name in names:
+                est_fn = scs[name].estimate
+                if est_fn is None:
+                    continue  # no mid-stream row on the subscriber path either
+                if name in est_keys:
+                    samples = ff.est_draws[name][i]
+                else:
+                    prefix = BufferState(
+                        theta[:, :t1], jnp.full((spec.M,), t1, jnp.int32)
+                    )
+                    samples = est_fn(
+                        jax.random.fold_in(k_names[name], t1), prefix,
+                        n_estimate, **filter_options(est_fn, options),
+                    ).samples
+                estimates.append((t1, name, samples))
+                rows.append({
+                    "t": t1, "combiner": name, "error": None, "elapsed_s": None,
+                })
+        jax.block_until_ready([s for _, _, s in estimates])
+        elapsed = time.time() - t_start  # one stamp: everything landed together
+        for row in rows:
+            row["elapsed_s"] = elapsed
+
+        final: Dict[str, CombineResult] = {}
+        for name in names:
+            fn = scs[name].finalize
+            host_state = faces[name].to_state(ff.states[name], theta, counts_T)
+            final[name] = fn(
+                k_names[name], host_state, spec.T,
+                **filter_options(fn, options),
+            )
+        self.timings["stream_combine_s"] = time.time() - t0
+        if self._combined is None and set(names) == set(spec.combiner_names()):
+            self._combined = dict(final)
+            self.timings.setdefault("combine_s", self.timings["stream_combine_s"])
+
+        label = ""
+        if score:
+            gt = self.groundtruth()
+            dist, label = resolve_metric(spec, self._model.d)
+            for row, (_, _, samples) in zip(rows, estimates):
+                row["error"] = float(dist(gt, samples))
+        return StreamResult(
+            combined=final,
+            trajectory=rows,
+            t_done=draws.t_done,
+            total=spec.T,
+            complete=True,
             metric=label,
             stream_every=spec.stream_every,
             n_estimate=n_estimate,

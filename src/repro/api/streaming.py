@@ -19,6 +19,30 @@ resumed run replays exactly the same chunk programs on the same inputs as
 one that never stopped. The mesh (``shard_map``) backend intentionally stays
 on the one-shot path in :mod:`repro.api.sampling`: its value is the compiled
 whole-chain HLO collective assert, and it does not checkpoint or stream.
+
+Fused hot path: when nobody subscribes (no checkpointing, no ``on_chunk``,
+no budget) a chunked run pays the host loop for nothing — every chunk is a
+device→host→device round trip of pure dispatch overhead. ``stream_sample``
+then runs :meth:`ShardChainStream.fused_program` instead: setup + a
+``lax.scan`` over the *same* chunk programs inside ONE jitted executable
+(backend tag ``"vmap[fused]"``). Two executables matter here, not one:
+
+- the fused **sampling** program is shared by every caller at the same
+  cadence — the plain sampling stage (hence the gather-then-combine path)
+  and ``Pipeline.stream_combine``'s fused mode produce the *same* theta
+  array from the same compiled program, which is what makes the fused
+  stream's finals bitwise the gather results;
+- the fused **combine-fold** program (:func:`fused_fold`) scans the
+  requested combiners' :class:`~repro.core.combiners.api.ScanStreamingFace`
+  updates (and in-scan trajectory estimates) over that device-resident
+  theta, with the fold states donated between steps — zero per-chunk host
+  hops on the combine side too.
+
+A literal single sample+combine scan was measured and rejected: hoisting
+the combine update into the sampling scan changes the XLA schedule enough
+that theta drifts from the chunked driver at the last ulp (~2e-7), which
+would break the bitwise gather contract. The split keeps both programs
+fused end-to-end *and* keeps theta identical by construction.
 """
 
 from __future__ import annotations
@@ -117,6 +141,10 @@ def _chunk_one(sk: ShardKernel, shard, count, eps, state, keys):
 # entries are immutable in-process, so a (model, sampler, options) key
 # pins the kernel closures exactly.
 _EXEC_CACHE: Dict[Tuple, Tuple[Any, Any]] = {}
+# fused whole-run sampling programs: _EXEC_CACHE key + (T, chunk)
+_FUSED_SAMPLE_CACHE: Dict[Tuple, Any] = {}
+# fused combine-fold programs: (combiner names, chunking, shapes, options)
+_FUSED_FOLD_CACHE: Dict[Tuple, Any] = {}
 
 
 def _freeze_options(options) -> Tuple:
@@ -162,6 +190,7 @@ class ShardChainStream:
             float(step_size), sgld_batch, _freeze_options(sampler_options),
             use_counts,
         )
+        self._cache_key = cache_key
         cached = _EXEC_CACHE.get(cache_key)
         if cached is None:
             sk = make_shard_kernel(
@@ -206,6 +235,59 @@ class ShardChainStream:
             ),
             "accept_sum": jnp.zeros((self.num_shards,), jnp.float32),
         }
+
+    def fused_program(self, chunk: int):
+        """ONE jitted executable for the whole run: setup + ``lax.scan`` over
+        the chunk programs (plus the statically-unrolled ragged tail).
+
+        The scan body calls the *same* ``chunk_fn`` the host-driven
+        :meth:`chunks` loop dispatches — whoever samples at this cadence
+        through this program (the plain stage, the fused stream) gets the
+        same theta from the same executable. Returns ``run(shards, counts,
+        keys) -> (theta (M, T, d), accept_sum (M,))``.
+        """
+        T = self.num_samples
+        key = self._cache_key + (T, int(chunk))
+        prog = _FUSED_SAMPLE_CACHE.get(key)
+        if prog is None:
+            n_full, tail = divmod(T, chunk)
+            setup, chunk_fn = self.setup, self.chunk_fn
+
+            def run(shards, counts, keys):
+                state, eps, k_collect = setup(shards, counts, keys)
+                ck = jax.vmap(lambda k: jax.random.split(k, T))(k_collect)
+                body = ck[:, : n_full * chunk]
+                xs = jnp.moveaxis(
+                    body.reshape(
+                        (body.shape[0], n_full, chunk) + body.shape[2:]
+                    ),
+                    1, 0,
+                )  # (n_full, M, chunk, key)
+
+                def step(st, kc):
+                    st, th, ac = chunk_fn(shards, counts, eps, st, kc)
+                    return st, (th, ac)
+
+                state, (ths, acs) = jax.lax.scan(step, state, xs)
+                theta = jnp.moveaxis(ths, 0, 1).reshape(
+                    ths.shape[1], n_full * chunk, ths.shape[-1]
+                )
+                accept = acs.sum(axis=0)
+                if tail:
+                    state, th_t, ac_t = chunk_fn(
+                        shards, counts, eps, state,
+                        ck[:, n_full * chunk :],
+                    )
+                    theta = jnp.concatenate([theta, th_t], axis=1)
+                    accept = accept + ac_t
+                return theta, accept
+
+            prog = _FUSED_SAMPLE_CACHE[key] = jax.jit(run)
+        return prog
+
+    def fused_sample(self, chunk: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Run the fused whole-run program on this stream's inputs."""
+        return self.fused_program(chunk)(self.shards, self.counts, self.keys)
 
     def chunks(
         self,
@@ -352,6 +434,29 @@ def stream_sample(
         use_counts=padded,
     )
 
+    # -- fused hot path: nobody subscribes, nothing to persist ---------------
+    # (the 0 < chunk < T guard keeps the classic one-chunk program — and its
+    # established numerics — for cadence-less runs)
+    if (
+        checkpoint_dir is None
+        and not on_chunk
+        and max_steps is None
+        and 0 < chunk < num_samples
+    ):
+        theta, accept_sum = stream.fused_sample(chunk)
+        return StreamedSample(
+            result=SampleResult(
+                theta,
+                accept_sum / jnp.maximum(num_samples, 1),
+                counts,
+                "vmap[fused]",
+                None,
+            ),
+            t_done=num_samples,
+            total=num_samples,
+            resumed_from=0,
+        )
+
     # -- restore or initialize ----------------------------------------------
     step = latest_step(checkpoint_dir) if checkpoint_dir is not None else None
     if step is not None:
@@ -443,3 +548,99 @@ def stream_sample(
         total=num_samples,
         resumed_from=resumed_from,
     )
+
+
+# ---------------------------------------------------------------------------
+# fused combine-fold (the P₁ program of the fused streaming hot path)
+# ---------------------------------------------------------------------------
+
+
+class FusedFold(NamedTuple):
+    """Artifact of :func:`fused_fold`.
+
+    ``states``: final in-scan state per combiner (feed through the face's
+    ``to_state`` before the host ``finalize``). ``est_draws``: stacked
+    ``(n_boundaries, n_estimate, d)`` in-scan trajectory draws for the
+    combiners whose face ships a scan ``estimate``. ``boundaries``: the
+    global draw indices the fold estimated at (full chunks + ragged tail).
+    """
+
+    states: Dict[str, Any]
+    est_draws: Dict[str, jnp.ndarray]
+    boundaries: Tuple[int, ...]
+
+
+def fused_fold(
+    theta: jnp.ndarray,
+    faces: Dict[str, Any],  # name -> ScanStreamingFace, insertion-ordered
+    est_keys: Dict[str, jnp.ndarray],  # name -> (n_boundaries,) stacked keys
+    n_estimate: int,
+    chunk: int,
+    options: Dict[str, Any],
+) -> FusedFold:
+    """Fold the gathered draws through every scan face in ONE jitted program.
+
+    A single ``lax.scan`` walks the ``(M, chunk, d)`` slices of ``theta`` (a
+    reshape of the device-resident array — no host hop per chunk), folds each
+    combiner's ``update`` and takes its in-scan ``estimate`` at every
+    boundary; the fold states are donated into the program. The per-boundary
+    estimate keys arrive pre-stacked so the trajectory RNG stream is exactly
+    the subscriber path's (``fold_in(k_name, t1)``).
+
+    Compiled programs are cached per (names, chunking, shapes, options) —
+    scan faces resolve from the immutable in-process registry, so the name
+    tuple pins the face closures exactly (same justification as the sampling
+    executable cache).
+    """
+    M, T, d = theta.shape
+    names = tuple(faces)
+    est_names = tuple(n for n in names if n in est_keys)
+    n_full, tail = divmod(T, chunk)
+    boundaries = tuple(chunk * (i + 1) for i in range(n_full)) + (
+        (T,) if tail else ()
+    )
+    key = (
+        names, est_names, int(chunk), T, M, d, int(n_estimate),
+        _freeze_options(options),
+    )
+    prog = _FUSED_FOLD_CACHE.get(key)
+    if prog is None:
+        from repro.utils.options import filter_kwargs
+
+        upd = {n: faces[n].update for n in names}
+        est_fns = {
+            n: functools.partial(
+                faces[n].estimate, **filter_kwargs(faces[n].estimate, options)
+            )
+            for n in est_names
+        }
+
+        def run(th, states, eks):
+            body = th[:, : n_full * chunk]
+            xs = jnp.moveaxis(body.reshape(M, n_full, chunk, d), 1, 0)
+            eks_body = {n: eks[n][:n_full] for n in est_names}
+
+            def step(ss, inp):
+                th_c, ek = inp
+                ss = {n: upd[n](ss[n], th_c) for n in names}
+                ests = {
+                    n: est_fns[n](ek[n], ss[n], n_estimate) for n in est_names
+                }
+                return ss, ests
+
+            states, ests = jax.lax.scan(step, states, (xs, eks_body))
+            if tail:
+                th_t = th[:, n_full * chunk :]
+                states = {n: upd[n](states[n], th_t) for n in names}
+                ests = {
+                    n: jnp.concatenate(
+                        [ests[n], est_fns[n](eks[n][n_full], states[n], n_estimate)[None]]
+                    )
+                    for n in est_names
+                }
+            return states, ests
+
+        prog = _FUSED_FOLD_CACHE[key] = jax.jit(run, donate_argnums=(1,))
+    init_states = {n: faces[n].init(M, d) for n in names}
+    states, ests = prog(theta, init_states, dict(est_keys))
+    return FusedFold(states=states, est_draws=ests, boundaries=boundaries)

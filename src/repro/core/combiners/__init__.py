@@ -81,12 +81,22 @@ Chunks are dense ``(M, C, d)`` per-machine slices; ``finalize`` on the
 buffered implementations is bitwise the batch combiner on the gathered
 stack. Consumers: ``Pipeline.stream_combine`` (combine-while-sampling) and
 ``epmcmc.combine_stream`` (mesh chunked gather).
+
+Fused streaming (the scan face): names additionally resolve through
+:func:`get_scan_face` to an optional :class:`ScanStreamingFace` — the
+jit-traceable subset (``init``/``update``/``to_state``/``estimate``) that
+``Pipeline.stream_combine`` scans inside one compiled combine-fold program
+when every requested combiner has one. ``parametric``/``online`` register
+explicit faces (``online``'s update runs the Pallas
+``repro.kernels.online_update`` kernel); buffered combiners get the trivial
+face automatically.
 """
 
 from repro.core.combiners.api import (  # noqa: F401
     BufferState,
     Combiner,
     CombineResult,
+    ScanStreamingFace,
     StreamingCombiner,
     available_combiners,
     buffer_append,
@@ -96,10 +106,12 @@ from repro.core.combiners.api import (  # noqa: F401
     counts_or_full,
     filter_options,
     get_combiner,
+    get_scan_face,
     get_streaming_combiner,
     log_weight_bruteforce,
     ragged_gather,
     register,
+    register_scan_face,
     register_streaming,
     resolve_schedule,
     streaming_combiners,
@@ -131,6 +143,7 @@ from repro.core.combiners.online import (  # noqa: F401
     online_product,
     online_update,
     online_update_chunk,
+    online_update_chunk_kernel,
 )
 from repro.core.combiners.parametric import parametric  # noqa: F401
 from repro.core.combiners.rpt import rpt  # noqa: F401

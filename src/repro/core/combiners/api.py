@@ -19,7 +19,7 @@ Streaming (paper §4 — combine as samples arrive): every registered name also
 resolves to a :class:`StreamingCombiner` via :func:`get_streaming_combiner` —
 either a native incremental implementation (attached through ``register``'s
 ``streaming=`` slot or :func:`register_streaming`) or the exact buffered
-fallback (:func:`buffered_streaming`), whose ``update``\ s-then-``finalize``
+fallback (:func:`buffered_streaming`), whose updates-then-``finalize``
 is bitwise identical to calling the batch combiner on the gathered stack.
 The streaming drivers run on the host between chunk arrivals (``update`` may
 branch on concrete shapes/counts); do not wrap them in ``jax.jit``.
@@ -89,9 +89,43 @@ class StreamingCombiner(NamedTuple):
     estimate: Optional[Callable[..., CombineResult]] = None
 
 
+class ScanStreamingFace(NamedTuple):
+    """Scan-compatible face of a streaming combiner (the fused hot path).
+
+    Where :class:`StreamingCombiner` is host-driven (``update`` may branch
+    on concrete shapes), this face is the fully *traceable* subset the fused
+    sample+combine program scans over — every callable here runs inside one
+    jitted ``lax.scan`` step, so it must be shape-stable and jit-safe:
+
+    - ``init(M, d) -> scan_state``: the in-scan accumulator (any pytree of
+      arrays; ``()`` for combiners whose only state is the draw buffer the
+      scan already carries);
+    - ``update(scan_state, chunk) -> scan_state``: fold one dense
+      ``(M, C, d)`` chunk in (chunks inside the fused program are always
+      dense — the driver owns raggedness);
+    - ``to_state(scan_state, theta, counts) -> state``: rebuild the
+      *host-side* :class:`StreamingCombiner` state from the final scan
+      state plus the full gathered ``(M, T, d)`` draws, so the existing
+      ``finalize`` runs unchanged (bitwise for the buffered combiners);
+    - ``estimate`` (optional): ``(key, scan_state, n_draws, **options) ->
+      (n_draws, d)`` in-scan trajectory draws. ``None`` means mid-stream
+      rows (if the host face has an ``estimate``) are computed post-hoc on
+      buffered prefixes of the returned draws — valid because every current
+      host ``estimate`` without a scan counterpart takes a
+      :class:`BufferState`; a future non-buffer streaming state must ship
+      its own scan ``estimate`` (or none at all).
+    """
+
+    init: Callable[[int, int], Any]
+    update: Callable[..., Any]
+    to_state: Callable[..., Any]
+    estimate: Optional[Callable[..., jnp.ndarray]] = None
+
+
 _REGISTRY: Dict[str, Combiner] = {}
 _CANONICAL: Dict[str, Combiner] = {}  # primary names only (no aliases)
 _STREAMING: Dict[str, StreamingCombiner] = {}  # native incremental impls
+_SCAN: Dict[str, ScanStreamingFace] = {}  # scan-compatible (fusable) faces
 
 
 def register(
@@ -163,6 +197,43 @@ def get_streaming_combiner(name: str) -> StreamingCombiner:
     if name in _STREAMING:
         return _STREAMING[name]
     return buffered_streaming(get_combiner(name))
+
+
+def register_scan_face(name: str, face: ScanStreamingFace) -> ScanStreamingFace:
+    """Attach a scan-compatible streaming face to a registered combiner
+    ``name`` (propagates to its aliases, like :func:`register_streaming`)."""
+    fn = get_combiner(name)
+    for key, batch in _REGISTRY.items():
+        if batch is fn:
+            _SCAN[key] = face
+    return face
+
+
+def get_scan_face(name: str) -> Optional[ScanStreamingFace]:
+    """Resolve a name to its :class:`ScanStreamingFace`, if it has one.
+
+    Three cases decide whether ``Pipeline.stream_combine`` may fuse:
+
+    - an explicitly registered face (``parametric``, ``online``, ...) — use
+      it;
+    - no *native* streaming implementation at all (the generic buffered
+      fallback) — the scan face is trivial: the fused scan already carries
+      the draws, so the in-scan state is ``()`` and ``to_state`` wraps the
+      gathered stack in a :class:`BufferState` (``finalize`` then replays
+      the batch combiner bitwise);
+    - a native streaming implementation *without* a declared scan face —
+      ``None``: its host ``update`` may be un-traceable, so the driver must
+      stay on the subscriber path.
+    """
+    if name in _SCAN:
+        return _SCAN[name]
+    if name not in _STREAMING:
+        return ScanStreamingFace(
+            init=lambda M, d: (),
+            update=lambda state, chunk: state,
+            to_state=lambda state, theta, counts: BufferState(theta, counts),
+        )
+    return None
 
 
 # ---------------------------------------------------------------------------

@@ -47,8 +47,15 @@ Execution modes (:func:`run_img`):
     where LW_m is the kernel's base-state weight of the single-site-m
     modification, A = Σ_J (‖cand_j‖²−‖θ_j‖²), s_B = θ̄₀·S, s_G = ‖S‖²,
     g_m = S·Δ_m, S = Σ_J Δ_j — all maintained in O(M) per site from the
-    precomputed Gram matrix G = ΔΔᵀ. Supported for the pure-``w_t`` weight
-    models (nonparametric, semiparametric-with-w_t).
+    precomputed Gram matrix G = ΔΔᵀ.
+
+    Full semiparametric ``W_t`` rides the same recursion: the candidate
+    state's mean is θ̄₀ + (S + Δ_m)/M and its per-sample term3 sum is
+    extra₀ + Σ_J δaux_j + δaux_m with δaux_m = aux[m, c_m] − aux[m, t_m],
+    so carrying S (B, d) and the accepted δaux sum (B,) exposes every
+    quantity the state-level correction log N(θ̄ | μ̂_M, Σ̂_M + h²/M I) +
+    Σ_m aux needs — O(B·d) per site, the same asymptotics as the Gram
+    precompute. The pure-``w_t`` models skip all of it at trace time.
 """
 
 from __future__ import annotations
@@ -222,6 +229,8 @@ def _img_kernel_sweep(
     samples: jnp.ndarray,
     counts: jnp.ndarray,
     h: jnp.ndarray,
+    aux: Optional[jnp.ndarray] = None,
+    extra_lw: Optional[Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]] = None,
 ) -> _ImgCarry:
     """One sweep for B chains at once, weights evaluated by the Pallas kernel.
 
@@ -229,6 +238,10 @@ def _img_kernel_sweep(
     state) are scored in one ``img_log_weights`` call; the site recursion then
     runs on O(M) scalars per chain using the exact rank-one correction
     derived in the module docstring — bitwise different, distribution-exact.
+    With ``extra_lw`` (semiparametric ``W_t``) the recursion also carries the
+    accepted delta sum S (B, d) and the accepted δaux sum (B,), so every
+    candidate's state-level correction term is evaluated from the base state
+    in O(d) — the pure-``w_t`` path is untouched at trace time.
     """
     from repro.kernels.img_weights import img_log_weights
 
@@ -264,22 +277,47 @@ def _img_kernel_sweep(
 
     lw_cur0 = -(carry.sumsq - M * msq0) * inv2h2 - log_norm  # current-state weight
 
+    semip = extra_lw is not None
+    if semip:
+        # δaux_m = aux[m, c_m] − aux[m, t_m]: per-site change of the Σ_m aux
+        # term (zero when the model has no per-sample terms but still wants
+        # the state-level correction — not a case the current models hit).
+        if aux is not None:
+            delta_aux = (
+                aux[jnp.arange(M)[None, :], c]
+                - aux[jnp.arange(M)[None, :], carry.t_idx]
+            ).astype(jnp.float32)  # (B, M)
+        else:
+            delta_aux = jnp.zeros((B, M), jnp.float32)
+        lw_cur0 = lw_cur0 + extra_lw(carry.mean, carry.extra)
+
     def site(state, m):
-        lw_cur, acc_nsq, s_b, s_g, g, a_mask, n_acc = state
+        if semip:
+            lw_cur, acc_nsq, s_b, s_g, g, s_vec, acc_aux, a_mask, n_acc = state
+        else:
+            lw_cur, acc_nsq, s_b, s_g, g, a_mask, n_acc = state
         g_m = g[:, m]
         corr = -(acc_nsq - 2.0 * s_b - (s_g + 2.0 * g_m) / M) * inv2h2
         lw_prop = lw_base[:, m] + corr
+        if semip:
+            mean_m = carry.mean + (s_vec + delta[:, m]) / M  # candidate θ̄
+            extra_m = carry.extra + acc_aux + delta_aux[:, m]
+            lw_prop = lw_prop + extra_lw(mean_m, extra_m)
         accept = jnp.log(u[:, m]) < lw_prop - lw_cur  # (B,)
         af = accept.astype(jnp.float32)
-        return (
+        out = (
             jnp.where(accept, lw_prop, lw_cur),
             acc_nsq + af * nsq[:, m],
             s_b + af * b_dot[:, m],
             s_g + af * (2.0 * g_m + gram[:, m, m]),
             g + af[:, None] * gram[:, m, :],
-            a_mask.at[:, m].set(accept),
-            n_acc + af,
-        ), None
+        )
+        if semip:
+            out = out + (
+                s_vec + af[:, None] * delta[:, m],
+                acc_aux + af * delta_aux[:, m],
+            )
+        return out + (a_mask.at[:, m].set(accept), n_acc + af), None
 
     zeros_b = jnp.zeros((B,), jnp.float32)
     init = (
@@ -288,10 +326,12 @@ def _img_kernel_sweep(
         zeros_b,
         zeros_b,
         jnp.zeros((B, M), jnp.float32),
-        jnp.zeros((B, M), bool),
-        zeros_b,
     )
-    (_, _, _, _, _, a_mask, n_acc), _ = jax.lax.scan(site, init, jnp.arange(M))
+    if semip:
+        init = init + (jnp.zeros((B, d), dtype), zeros_b)
+    init = init + (jnp.zeros((B, M), bool), zeros_b)
+    final, _ = jax.lax.scan(site, init, jnp.arange(M))
+    a_mask, n_acc = final[-2], final[-1]
 
     af = a_mask.astype(dtype)
     mean_new = carry.mean + jnp.einsum("bm,bmd->bd", af, delta) / M
@@ -302,6 +342,7 @@ def _img_kernel_sweep(
         theta_sel=jnp.where(a_mask[:, :, None], cand, carry.theta_sel),
         mean=mean_new,
         sumsq=sumsq_new,
+        extra=(carry.extra + final[6]) if semip else carry.extra,
         n_accept=carry.n_accept + n_acc,
     )
 
@@ -318,7 +359,7 @@ def _run_batched_kernel(
     """B chains × ``n_sweeps`` vectorized sweeps → ((n_sweeps, B, d), (B,))."""
     M, T, d = samples.shape
     keys = jax.random.split(key, n_batch)
-    carry = jax.vmap(lambda k: _init_img_carry(k, samples, counts, None))(keys)
+    carry = jax.vmap(lambda k: _init_img_carry(k, samples, counts, model.aux))(keys)
 
     def step(carry: _ImgCarry, i: jnp.ndarray):
         # Shared global anneal index: sweep i covers serial rows (i·B, (i+1)·B];
@@ -326,7 +367,10 @@ def _run_batched_kernel(
         # block's most-annealed index — after n_sweeps the bandwidth matches
         # the serial chain's h(n_draws) instead of stalling at h(n_draws/B).
         h = schedule((i + 1) * n_batch).astype(samples.dtype)
-        carry = _img_kernel_sweep(carry, samples, counts, h)
+        extra_lw = (
+            model.extra_logweight(h) if model.extra_logweight is not None else None
+        )
+        carry = _img_kernel_sweep(carry, samples, counts, h, model.aux, extra_lw)
         split = jax.vmap(jax.random.split)(carry.key)  # (B, 2, 2)
         carry = carry._replace(key=split[:, 0])
         theta = jax.vmap(lambda k, mn: model.draw(k, mn, h))(split[:, 1], carry.mean)
@@ -357,18 +401,14 @@ def run_img(
     ``n_batch``: number of independent index-chains (each does
     ``ceil(n_draws/n_batch)`` sweeps). ``weight_eval``: ``"incremental"``
     (O(d) single-site recursion) or ``"kernel"`` (vectorized sweeps scored by
-    the Pallas ``img_weights`` kernel; pure-``w_t`` weight models only).
+    the Pallas ``img_weights`` kernel; supports every registered weight model
+    including full semiparametric ``W_t``).
     """
     M, T, d = samples.shape
     n_batch = max(1, min(int(n_batch), int(n_draws)))
     n_sweeps = -(-n_draws // n_batch)  # ceil
 
     if weight_eval == "kernel":
-        if model.aux is not None or model.extra_logweight is not None:
-            raise ValueError(
-                "weight_eval='kernel' supports pure-w_t weight models only "
-                "(nonparametric, or semiparametric with nonparametric_weights=True)"
-            )
         draws, n_acc = _run_batched_kernel(
             key, samples, counts, n_sweeps, n_batch, schedule, model
         )

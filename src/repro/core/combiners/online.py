@@ -13,12 +13,14 @@ registered as the ``online`` combiner with both faces:
   slot, whose state *is* :class:`OnlineMoments` — the one built-in combiner
   that never buffers draws.
 
-Tolerance note: Welford merges associate differently across chunkings, so a
-streamed ``online`` run agrees with its batch face only to merge-rounding
-(f32 last-ulp per fold), and with the batch ``parametric`` combiner to
-O(jitter + rounding) — ``parametric`` fits masked two-pass moments, this
-path merges running moments. The exact-bitwise streaming guarantee belongs
-to the buffered combiners (see ``api.buffered_streaming``).
+The scan face (fused streaming hot path) folds chunks through the Pallas
+``online_update`` kernel via :func:`online_update_chunk_kernel`. The
+merge-rounding tolerance contract lives next to that kernel, in
+:mod:`repro.kernels.online_update.ops` — in short: Welford merges associate
+differently across chunkings and evaluation orders, so streamed/fused
+``online`` runs agree with the batch face to f32 last-ulp per fold, never
+bitwise; the exact-bitwise streaming guarantee belongs to the buffered
+combiners (see ``api.buffered_streaming``).
 """
 
 from __future__ import annotations
@@ -30,9 +32,11 @@ import jax.numpy as jnp
 
 from repro.core.combiners.api import (
     CombineResult,
+    ScanStreamingFace,
     StreamingCombiner,
     counts_or_full,
     register,
+    register_scan_face,
 )
 from repro.core.gaussian import GaussianMoments, product_moments, sample_gaussian
 
@@ -109,6 +113,27 @@ def online_update_chunk(
     )
 
 
+def online_update_chunk_kernel(
+    state: OnlineMoments,
+    chunk: jnp.ndarray,
+    chunk_counts: Optional[jnp.ndarray] = None,
+) -> OnlineMoments:
+    """Pallas-backed chunk fold: same merge as :func:`online_update_chunk`,
+    computed by the fused ``online_update`` kernel
+    (:func:`repro.kernels.online_update.online_moments_update` — batch
+    moments + Chan merge in one VMEM-resident pass per machine). Agreement
+    with the jnp path is f32 last-ulp per fold; see the tolerance note in
+    :mod:`repro.kernels.online_update.ops`. jit-safe — this is the scan
+    face's update on the fused streaming hot path.
+    """
+    from repro.kernels.online_update import online_moments_update
+
+    count, mean, m2 = online_moments_update(
+        state.count, state.mean, state.m2, chunk, chunk_counts
+    )
+    return OnlineMoments(count=count, mean=mean, m2=m2)
+
+
 def online_product(state: OnlineMoments, *, jitter: float = 1e-8) -> GaussianMoments:
     """Current parametric product estimate from streaming moments."""
     d = state.mean.shape[-1]
@@ -150,3 +175,18 @@ def online(
     M, _, d = samples.shape
     state = online_update_chunk(online_init(M, d, samples.dtype), samples, counts)
     return _finalize(key, state, n_draws, jitter=jitter)
+
+
+# Scan face (fused streaming): the host state already IS the scan state —
+# OnlineMoments pass through ``to_state`` untouched, and chunk folds run the
+# Pallas kernel. No ``estimate``: the host face has none either (finalize is
+# already cheap), so fused and subscriber streams emit identical (empty)
+# trajectory rows for ``online``.
+ONLINE_SCAN = register_scan_face(
+    "online",
+    ScanStreamingFace(
+        init=online_init,
+        update=online_update_chunk_kernel,
+        to_state=lambda scan_state, theta, counts: scan_state,
+    ),
+)

@@ -25,6 +25,14 @@ Attached to the registry via :func:`~repro.core.combiners.api.register_streaming
 
 Every other registered combiner streams through the generic buffered
 fallback of :func:`~repro.core.combiners.api.get_streaming_combiner`.
+
+Scan faces (the fused sample+combine hot path — see
+:class:`~repro.core.combiners.api.ScanStreamingFace`): ``parametric`` scans
+its Welford moments only (the draw buffer is the fused scan's own output)
+and estimates the moment product in-scan; the buffer-state combiners
+(``pool``, ``subpost_average``, ``nonparametric``) carry a trivial ``()``
+scan state and rebuild their :class:`BufferState` from the gathered draws
+after the scan, so their host ``estimate``/``finalize`` run unchanged.
 """
 
 from __future__ import annotations
@@ -34,10 +42,12 @@ from typing import NamedTuple
 from repro.core.combiners.api import (
     BufferState,
     CombineResult,
+    ScanStreamingFace,
     StreamingCombiner,
     buffer_append,
     buffer_init,
     buffered_streaming,
+    register_scan_face,
     register_streaming,
 )
 from repro.core.combiners.baselines import pool_combiner, subpost_average_combiner
@@ -45,10 +55,12 @@ from repro.core.combiners.img import nonparametric
 from repro.core.combiners.online import (
     OnlineMoments,
     online_init,
+    online_product,
     online_update_chunk,
 )
 from repro.core.combiners.online import _finalize as _online_finalize
 from repro.core.combiners.parametric import parametric
+from repro.core.gaussian import sample_gaussian
 
 
 # ---------------------------------------------------------------------------
@@ -94,6 +106,30 @@ PARAMETRIC_STREAMING = register_streaming(
         update=_parametric_update,
         finalize=_parametric_finalize,
         estimate=_parametric_estimate,
+    ),
+)
+
+
+def _parametric_scan_estimate(
+    key, moments: OnlineMoments, n_draws: int, *, jitter: float = 1e-8, **_ignored
+):
+    # same math as _parametric_estimate (sample the product of the running
+    # moments), as raw draws — traced into the fused scan step
+    return sample_gaussian(key, online_product(moments, jitter=jitter), n_draws)
+
+
+PARAMETRIC_SCAN = register_scan_face(
+    "parametric",
+    ScanStreamingFace(
+        init=online_init,
+        # the jnp chunk merge, not the Pallas kernel: trajectory estimates
+        # then track the subscriber path's moment math exactly (the kernel
+        # is the `online` combiner's scan face)
+        update=online_update_chunk,
+        to_state=lambda moments, theta, counts: ParametricStreamState(
+            BufferState(theta, counts), moments
+        ),
+        estimate=_parametric_scan_estimate,
     ),
 )
 
@@ -144,3 +180,19 @@ NONPARAMETRIC_STREAMING = register_streaming(
         estimate=_nonparametric_estimate,
     ),
 )
+
+
+# ---------------------------------------------------------------------------
+# buffer-state scan faces: the fused scan already materializes the draws, so
+# the in-scan state is trivial and the host BufferState is rebuilt from the
+# gathered (M, T, d) stack afterwards. `estimate=None` here means mid-stream
+# rows are computed post-hoc on buffered prefixes by the fused driver.
+# ---------------------------------------------------------------------------
+
+_BUFFER_SCAN = ScanStreamingFace(
+    init=lambda M, d: (),
+    update=lambda state, chunk: state,
+    to_state=lambda state, theta, counts: BufferState(theta, counts),
+)
+for _name in ("pool", "subpost_average", "nonparametric"):
+    register_scan_face(_name, _BUFFER_SCAN)

@@ -1,0 +1,4 @@
+"""Fused Welford/Chan-merge streaming-moments update (``online`` combiner)."""
+
+from repro.kernels.online_update.ops import online_moments_update  # noqa: F401
+from repro.kernels.online_update.ref import online_moments_update_ref  # noqa: F401

@@ -81,15 +81,25 @@ def log_lik(theta: jnp.ndarray, data: Data) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def gibbs_blocks(data: Data, num_shards: int, mh_step: float = 0.15):
+def gibbs_blocks(data: Data, num_shards: int, mh_step: float = 0.15, count=None):
     """Block updates over position dict {"theta": (2,), "q": (n,)}.
 
     The prior on (a,b) is raised to 1/M (subposterior, Eq. 2.1); the latent
     q_i are shard-local so their conditionals are untouched by 1/M.
+
+    ``count`` masks the edge-pad convention's replicated tail rows out of the
+    global conditionals: the per-row latents q_i are still refreshed for every
+    row (identical RNG consumption either way, and padded q_i stay proper
+    Gamma draws), but the b- and a-conditionals only see the first ``count``
+    rows' sufficient statistics (Σ w·q, Σ w·log q, count·a, ...), exactly the
+    shard's real data. ``count=None`` leaves every statistic bit-identical to
+    the unmasked path.
     """
     x, t = data["x"], data["t"]
     n = x.shape[0]
     inv_m = 1.0 / float(num_shards)
+    w = None if count is None else (jnp.arange(n) < count).astype(x.dtype)
+    n_eff = float(n) if count is None else count.astype(x.dtype)
 
     def update_q(key, pos):
         a, b = jnp.exp(pos["theta"][0]), jnp.exp(pos["theta"][1])
@@ -101,8 +111,10 @@ def gibbs_blocks(data: Data, num_shards: int, mh_step: float = 0.15):
         a = jnp.exp(pos["theta"][0])
         # b | a, q ~ Gamma(α/M' + N a, β' + Σ q)  — prior tempered by 1/M:
         # p(b)^{1/M} ∝ b^{(α-1)/M} e^{-βb/M}; conjugate with ∏ Gamma(q_i|a,b).
-        shape = (ALPHA - 1.0) * inv_m + 1.0 + n * a
-        rate = BETA * inv_m + jnp.sum(pos["q"])
+        shape = (ALPHA - 1.0) * inv_m + 1.0 + n_eff * a
+        rate = BETA * inv_m + (
+            jnp.sum(pos["q"]) if w is None else jnp.sum(w * pos["q"])
+        )
         b = jax.random.gamma(key, shape) / rate
         theta = pos["theta"].at[1].set(jnp.log(b))
         return {**pos, "theta": theta}
@@ -116,7 +128,12 @@ def gibbs_blocks(data: Data, num_shards: int, mh_step: float = 0.15):
         def cond(log_a):
             a = jnp.exp(log_a)
             prior = inv_m * (-LAMBDA * a) + log_a  # tempered Exp(λ) + Jacobian
-            lik = jnp.sum((a - 1.0) * jnp.log(q) + a * jnp.log(b) - gammaln(a))
+            if w is None:
+                lik = jnp.sum((a - 1.0) * jnp.log(q) + a * jnp.log(b) - gammaln(a))
+            else:
+                lik = (a - 1.0) * jnp.sum(w * jnp.log(q)) + n_eff * (
+                    a * jnp.log(b) - gammaln(a)
+                )
             return prior + lik
 
         log_a = pos["theta"][0]
@@ -145,12 +162,13 @@ registry.register_model(
         default_n=50_000,
         default_sampler="rwmh",
         # criterion 3 (§8.3): conjugate latent-q Gibbs path — only (log a,
-        # log b) are shared across machines, the q_i stay shard-local
-        gibbs_blocks=lambda shard, num_shards, *, step_size=0.15: gibbs_blocks(
-            shard, num_shards, mh_step=step_size
-        ),
+        # log b) are shared across machines, the q_i stay shard-local;
+        # count masks edge-padded rows so ragged shards sample exactly
+        gibbs_blocks=lambda shard, num_shards, *, step_size=0.15, count=None:
+            gibbs_blocks(shard, num_shards, mh_step=step_size, count=count),
         gibbs_init=gibbs_init,
         gibbs_extract=lambda positions: positions["theta"],
+        gibbs_counts=True,
     ),
     "poisson_gamma",
 )

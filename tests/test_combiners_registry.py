@@ -138,13 +138,17 @@ def test_semiparametric_batched_runs(two_gaussian_product):
                                np.asarray(prod_mean), atol=0.15)
 
 
-def test_kernel_path_rejects_full_semiparametric_weights(two_gaussian_product):
-    """W_t weights carry state the vectorized scalar recursion doesn't track."""
-    samples, _, _ = two_gaussian_product
-    with pytest.raises(ValueError, match="w_t"):
-        get_combiner("semiparametric")(
-            jax.random.PRNGKey(6), samples, 64, weight_eval="kernel"
-        )
+def test_kernel_path_supports_full_semiparametric_weights(two_gaussian_product):
+    """The vectorized sweep now carries the accepted mean-shift and aux
+    deltas, so full semiparametric ``W_t`` runs on ``weight_eval="kernel"``
+    (it used to raise). Product posterior must match the analytic one."""
+    samples, prod_mean, _ = two_gaussian_product
+    res = get_combiner("semiparametric")(
+        jax.random.PRNGKey(6), samples, 64, weight_eval="kernel", n_batch=4
+    )
+    out = np.asarray(res.samples)
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out.mean(axis=0), np.asarray(prod_mean), atol=0.2)
 
 
 def test_kernel_sweep_decisions_match_bruteforce_replay():

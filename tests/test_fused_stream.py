@@ -1,0 +1,264 @@
+"""Fused streaming hot path: fold parity, Pallas online-update kernel, and
+the semiparametric ``weight_eval="kernel"`` sweep.
+
+Correctness contract (ISSUE 6): the fused combine-fold program must agree
+with the unfused chunked driver for every registered streaming combiner —
+bitwise where the state is a draw buffer (the fused scan carries the draws
+themselves), documented-tolerance where the state is running moments (the
+scan body and the eager per-chunk calls round reductions differently, and
+``online``'s fused face runs the Pallas kernel).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Pipeline, RunSpec
+from repro.api.streaming import fused_fold
+from repro.core.combiners import (
+    BufferState,
+    canonical_combiners,
+    get_scan_face,
+    get_streaming_combiner,
+    semiparametric,
+    semiparametric_w,
+)
+
+M, T, D, CHUNK = 4, 64, 3, 16
+
+
+def _cloud(key, m=M, t=T, d=D):
+    """Synthetic subposterior draws: per-machine offset Gaussian clouds."""
+    k1, k2 = jax.random.split(key)
+    mu = 0.4 * jax.random.normal(k1, (m, 1, d))
+    return mu + 0.6 * jax.random.normal(k2, (m, t, d))
+
+
+def _host_fold(name, theta, chunk):
+    """The unfused chunked driver's state: per-chunk host update calls."""
+    sc = get_streaming_combiner(name)
+    state = sc.init(theta.shape[0], theta.shape[2])
+    for i in range(0, theta.shape[1], chunk):
+        state = sc.update(state, theta[:, i : i + chunk])
+    return sc, state
+
+
+def _leaves_equal(a, b, bitwise=True, **tol):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        if bitwise:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), **tol)
+
+
+@pytest.mark.parametrize("name", canonical_combiners())
+def test_fused_fold_state_matches_chunked_driver(name):
+    """fused_fold's post-scan host state ≡ the subscriber driver's state for
+    every registered streaming combiner (buffered fallbacks included)."""
+    face = get_scan_face(name)
+    assert face is not None, f"{name} lost its scan face — fusion coverage gap"
+    theta = _cloud(jax.random.PRNGKey(0))
+    counts = jnp.full((M,), T, jnp.int32)
+
+    ff = fused_fold(theta, {name: face}, {}, 16, CHUNK, {})
+    fused_state = face.to_state(ff.states[name], theta, counts)
+    _, host_state = _host_fold(name, theta, CHUNK)
+
+    if name == "online":
+        # moments-only state; fused face runs the Pallas kernel (ref
+        # fallback at this chunk size), host runs the jnp merge — the
+        # documented merge-rounding tolerance applies
+        _leaves_equal(fused_state, host_state, bitwise=False, rtol=1e-5, atol=1e-5)
+    elif name == "parametric":
+        # buffer component bitwise, Welford moments to scan-vs-eager rounding
+        _leaves_equal(fused_state.buffer, host_state.buffer)
+        _leaves_equal(fused_state.moments, host_state.moments,
+                      bitwise=False, rtol=1e-5, atol=1e-5)
+    else:
+        # draw-buffer states: the fused scan carries the draws themselves,
+        # so the rebuilt state is bitwise the chunk-appended buffer
+        _leaves_equal(fused_state, host_state)
+
+
+@pytest.mark.parametrize("name", ["parametric", "pool", "consensus"])
+def test_fused_fold_finalize_parity(name):
+    """finalize on the fused-rebuilt state ≡ finalize on the chunk-folded
+    state (same key): bitwise for the buffer-backed states."""
+    face = get_scan_face(name)
+    theta = _cloud(jax.random.PRNGKey(1))
+    counts = jnp.full((M,), T, jnp.int32)
+    ff = fused_fold(theta, {name: face}, {}, 16, CHUNK, {})
+    sc, host_state = _host_fold(name, theta, CHUNK)
+    key = jax.random.PRNGKey(7)
+    res_f = sc.finalize(key, face.to_state(ff.states[name], theta, counts), 40)
+    res_h = sc.finalize(key, host_state, 40)
+    np.testing.assert_array_equal(np.asarray(res_f.samples), np.asarray(res_h.samples))
+
+
+def test_online_scan_face_runs_pallas_kernel_chunked():
+    """At kernel-eligible chunk sizes (C ≥ 32) the online face's Pallas
+    update stays within merge-rounding tolerance of the jnp chunk merge."""
+    face = get_scan_face("online")
+    theta = _cloud(jax.random.PRNGKey(2), t=128)
+    counts = jnp.full((M,), 128, jnp.int32)
+    ff = fused_fold(theta, {"online": face}, {}, 16, 32, {})
+    fused_state = face.to_state(ff.states["online"], theta, counts)
+    _, host_state = _host_fold("online", theta, 32)
+    _leaves_equal(fused_state, host_state, bitwise=False, rtol=2e-4, atol=2e-4)
+
+    sc = get_streaming_combiner("online")
+    key = jax.random.PRNGKey(9)
+    res_f = sc.finalize(key, fused_state, 40)
+    res_h = sc.finalize(key, host_state, 40)
+    np.testing.assert_allclose(
+        np.asarray(res_f.samples), np.asarray(res_h.samples), rtol=1e-3, atol=1e-3
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pallas online_update kernel vs the jnp reference (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+def _np_moments(x):
+    """Two-pass numpy reference: (count, mean, M2) of a (C, d) block."""
+    mean = x.mean(axis=0)
+    c = x - mean
+    return float(x.shape[0]), mean, c.T @ c
+
+
+def test_online_update_kernel_matches_reference_dense():
+    from repro.kernels.online_update import (
+        online_moments_update,
+        online_moments_update_ref,
+    )
+
+    key = jax.random.PRNGKey(3)
+    m, c, d = 3, 40, 5
+    a = jax.random.normal(key, (m, c, d))
+    b = 2.0 + 0.5 * jax.random.normal(jax.random.fold_in(key, 1), (m, c, d))
+
+    cnt0 = jnp.zeros((m,))
+    mu0 = jnp.zeros((m, d))
+    m20 = jnp.zeros((m, d, d))
+    ck, mk, m2k = online_moments_update(cnt0, mu0, m20, a, interpret=True)
+    ck, mk, m2k = online_moments_update(ck, mk, m2k, b, interpret=True)
+    cr, mr, m2r = online_moments_update_ref(cnt0, mu0, m20, a)
+    cr, mr, m2r = online_moments_update_ref(cr, mr, m2r, b)
+
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(cr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(mk), np.asarray(mr), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m2k), np.asarray(m2r), rtol=1e-4, atol=1e-4)
+
+    # and both agree with the two-pass numpy moments of the full stream
+    for i in range(m):
+        full = np.concatenate([np.asarray(a)[i], np.asarray(b)[i]])
+        n, mu, m2 = _np_moments(full)
+        assert float(ck[i]) == n
+        np.testing.assert_allclose(np.asarray(mk)[i], mu, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(m2k)[i], m2, rtol=1e-3, atol=1e-3)
+
+
+def test_online_update_kernel_masks_ragged_padding():
+    """Rows past ``chunk_counts`` must not contribute — fill them with NaN
+    garbage and demand finite, reference-matching moments."""
+    from repro.kernels.online_update import (
+        online_moments_update,
+        online_moments_update_ref,
+    )
+
+    key = jax.random.PRNGKey(4)
+    m, c, d = 3, 48, 4
+    x = jax.random.normal(key, (m, c, d))
+    counts = jnp.asarray([48, 17, 0], jnp.int32)
+    mask = jnp.arange(c)[None, :, None] < counts[:, None, None]
+    x_nan = jnp.where(mask, x, jnp.nan)
+    x_zero = jnp.where(mask, x, 0.0)
+
+    cnt0 = jnp.zeros((m,))
+    mu0 = jnp.zeros((m, d))
+    m20 = jnp.zeros((m, d, d))
+    ck, mk, m2k = online_moments_update(
+        cnt0, mu0, m20, x_nan, counts, interpret=True
+    )
+    cr, mr, m2r = online_moments_update_ref(cnt0, mu0, m20, x_zero, counts)
+
+    assert np.isfinite(np.asarray(mk)).all() and np.isfinite(np.asarray(m2k)).all()
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(cr), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(mk), np.asarray(mr), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(m2k), np.asarray(m2r), rtol=1e-4, atol=1e-4)
+    # the count-0 machine is untouched
+    np.testing.assert_array_equal(np.asarray(mk)[2], np.zeros(d))
+    np.testing.assert_array_equal(np.asarray(m2k)[2], np.zeros((d, d)))
+
+
+# ---------------------------------------------------------------------------
+# semiparametric W_t on the vectorized kernel sweep (ISSUE 6 tentpole part 3)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("combiner", [semiparametric, semiparametric_w])
+def test_semiparametric_kernel_sweep_matches_incremental(combiner):
+    """``weight_eval="kernel"`` now supports full semiparametric ``W_t``:
+    same fixed seed, same cloud — the vectorized sweep must land on the
+    same combined posterior as the incremental scorer (distributional
+    agreement; the two paths walk different index chains)."""
+    theta = _cloud(jax.random.PRNGKey(5), t=120)
+    key = jax.random.PRNGKey(11)
+    inc = combiner(key, theta, 160, weight_eval="incremental", n_batch=8)
+    ker = combiner(key, theta, 160, weight_eval="kernel", n_batch=8)
+
+    si, sk = np.asarray(inc.samples), np.asarray(ker.samples)
+    assert np.isfinite(sk).all()
+    assert sk.shape == si.shape
+    np.testing.assert_allclose(sk.mean(axis=0), si.mean(axis=0), atol=0.2)
+    np.testing.assert_allclose(sk.std(axis=0), si.std(axis=0), atol=0.2)
+
+
+# ---------------------------------------------------------------------------
+# pipeline-level: fused default vs subscriber path, and the fused=True gate
+# ---------------------------------------------------------------------------
+
+
+def _spec(**overrides):
+    base = dict(
+        model="linear", sampler="mala", combiner=("parametric", "pool", "consensus"),
+        M=4, T=120, warmup=20, n=512, seed=3, groundtruth_T=60,
+        score_metric="logl2", stream_every=40,
+    )
+    base.update(overrides)
+    return RunSpec(**base)
+
+
+def test_stream_combine_fused_matches_subscriber_end_to_end():
+    sf = Pipeline(_spec(), check_hlo=False).stream_combine(n_estimate=32, score=False)
+    su = Pipeline(_spec(), check_hlo=False).stream_combine(
+        n_estimate=32, score=False, fused=False
+    )
+    assert sf.complete and su.complete
+    # identical trajectory structure: same boundaries, same emitting combiners
+    assert [(r["t"], r["combiner"]) for r in sf.trajectory] == [
+        (r["t"], r["combiner"]) for r in su.trajectory
+    ]
+    # finals agree to tolerance: the two paths sample through different
+    # executables (fused scan vs sequential chunk dispatches), whose draws
+    # agree only to the last ulp, so bitwise equality is not the contract
+    for name in ("parametric", "pool", "consensus"):
+        np.testing.assert_allclose(
+            np.asarray(sf.combined[name].samples),
+            np.asarray(su.combined[name].samples),
+            rtol=1e-3, atol=1e-3,
+        )
+
+
+def test_fused_flag_raises_when_unfusable(tmp_path):
+    """``fused=True`` with a checkpoint subscriber must refuse loudly, not
+    silently drop checkpointing."""
+    pipe = Pipeline(_spec(), check_hlo=False, checkpoint_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="fused"):
+        pipe.stream_combine(n_estimate=32, score=False, fused=True)

@@ -1,0 +1,105 @@
+"""CI perf-regression gate (benchmarks.gate) logic tests — no jax needed."""
+
+from __future__ import annotations
+
+import json
+
+import pytest
+
+gate = pytest.importorskip("benchmarks.gate")
+
+
+def _snap(ts, **metrics):
+    """A snapshot with stream/M=4 timing rows: _snap("t1", stream_total=0.5)."""
+    return {
+        "timestamp": ts,
+        "rows": [
+            {"bench": "stream", "case": "M=4", "metric": k, "value": v, "units": "s"}
+            for k, v in metrics.items()
+        ],
+    }
+
+
+def test_regression_beyond_threshold_fails():
+    history = [_snap(f"t{i}", stream_total=0.5) for i in range(3)]
+    bad = _snap("t9", stream_total=0.7)  # +40% vs median 0.5
+    verdicts = gate.evaluate(bad, history, threshold=0.25)
+    assert [v.failed for v in verdicts] == [True]
+    assert verdicts[0].baseline == pytest.approx(0.5)
+
+
+def test_within_threshold_passes():
+    history = [_snap(f"t{i}", stream_total=0.5) for i in range(3)]
+    ok = _snap("t9", stream_total=0.6)  # +20% < 25%
+    assert not any(v.failed for v in gate.evaluate(ok, history, threshold=0.25))
+
+
+def test_median_absorbs_one_noisy_baseline_run():
+    history = [
+        _snap("t0", stream_total=0.5),
+        _snap("t1", stream_total=5.0),  # one bad CI box
+        _snap("t2", stream_total=0.5),
+    ]
+    verdicts = gate.evaluate(_snap("t9", stream_total=0.55), history)
+    assert verdicts[0].baseline == pytest.approx(0.5)
+    assert not verdicts[0].failed
+
+
+def test_new_metric_passes_vacuously():
+    history = [_snap("t0", stream_total=0.5)]
+    cand = _snap("t9", stream_total=0.5, stream_total_fused=0.2)
+    verdicts = {v.key[2]: v for v in gate.evaluate(cand, history)}
+    assert verdicts["stream_total_fused"].baseline is None
+    assert not verdicts["stream_total_fused"].failed
+
+
+def test_only_stream_and_combine_second_rows_gate():
+    cand = {
+        "rows": [
+            {"bench": "stream", "case": "M=4", "metric": "fused_speedup",
+             "value": 9.0, "units": "x"},  # ratio row: not gated
+            {"bench": "kernels", "case": "d=8", "metric": "t", "value": 9.0,
+             "units": "s"},  # non-gated bench
+            {"bench": "combine", "case": "M=4", "metric": "t_parametric",
+             "value": 0.1, "units": "s"},
+        ]
+    }
+    assert set(gate.gated_rows(cand)) == {("combine", "M=4", "t_parametric")}
+
+
+def test_noise_floor_rows_never_fail():
+    history = [_snap(f"t{i}", tiny=0.001) for i in range(3)]
+    verdicts = gate.evaluate(_snap("t9", tiny=0.01), history, min_seconds=0.03)
+    assert not verdicts[0].failed  # 10x slower but under the noise floor
+
+
+def test_cli_end_to_end(tmp_path, capsys):
+    for i, v in enumerate((0.5, 0.52, 0.48)):
+        (tmp_path / f"BENCH_2026010{i}_000000.json").write_text(
+            json.dumps(_snap(f"t{i}", stream_total=v))
+        )
+    (tmp_path / "BENCH_20260109_000000.json").write_text(
+        json.dumps(_snap("t9", stream_total=0.51))
+    )
+    assert gate.main(["--perf-dir", str(tmp_path)]) == 0
+    assert "passed" in capsys.readouterr().out
+
+    (tmp_path / "BENCH_20260110_000000.json").write_text(
+        json.dumps(_snap("t10", stream_total=2.0))
+    )
+    assert gate.main(["--perf-dir", str(tmp_path)]) == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_cli_explicit_candidate_excluded_from_own_baseline(tmp_path):
+    for i, v in enumerate((0.5, 0.5, 0.5)):
+        (tmp_path / f"BENCH_2026010{i}_000000.json").write_text(
+            json.dumps(_snap(f"t{i}", stream_total=v))
+        )
+    cand = tmp_path / "BENCH_20260109_000000.json"
+    cand.write_text(json.dumps(_snap("t9", stream_total=0.9)))
+    assert gate.main(["--perf-dir", str(tmp_path), "--candidate", str(cand)]) == 1
+
+
+def test_cli_empty_dir_is_a_pass(tmp_path):
+    assert gate.main(["--perf-dir", str(tmp_path)]) == 0
