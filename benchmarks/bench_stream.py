@@ -20,7 +20,12 @@ call — a latency win that grows with T. This bench records, at M ∈ {4, 10}:
 - ``first_estimate_speedup``: gather latency / time-to-first-estimate;
 - ``fused_speedup``: ``stream_total / stream_total_fused`` — the fused hot
   path's win over the per-chunk host-loop driver (acceptance floor: ≥ 2×
-  at M=4 on CPU).
+  at M=4 on CPU);
+- ``stream_total_mesh``: the same streaming run on the
+  :class:`repro.api.backends.MeshChunkBackend` (mesh (4,1) at M=4, (2,1)
+  at M=10), timed in a forced-4-device subprocess — the figure that keeps
+  mesh streaming from silently regressing vs the vmap backend. A broken
+  subprocess fails the bench loudly; it is never skipped.
 
 Groundtruth scoring is skipped on both sides (``score=False``): the bench
 measures the sample→combine dataflow, not the reference chain. Both paths
@@ -32,6 +37,11 @@ the CPU-sized quick configuration.
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
 from typing import List
 
@@ -81,6 +91,61 @@ def _stream_run(M: int, T: int, stream_every: int, fused: bool):
     return time.perf_counter() - t0, sr
 
 
+def _mesh_rows(T: int) -> List[Row]:
+    """``stream_total_mesh`` at M ∈ {4, 10}, timed in a forced-4-device
+    subprocess (the parent's device count is fixed at JAX init). Subprocess
+    failure raises — a mesh-streaming regression must fail the bench."""
+    code = textwrap.dedent(f"""
+        import json, time
+        from repro.api import Pipeline, RunSpec
+        out = []
+        for M, mesh in ((4, (4, 1)), (10, (2, 1))):
+            spec = RunSpec(
+                model="linear", sampler="mala", combiner=("{COMBINER}",),
+                M=M, T={T}, warmup=50, n=4096, seed=0, groundtruth_T=100,
+                score_metric="logl2", stream_every=max({T} // 12, 1),
+                mesh_shape=mesh)
+            Pipeline(spec, check_hlo=False).stream_combine(
+                n_estimate=128, score=False)  # warm the jit caches
+            t0 = time.perf_counter()
+            sr = Pipeline(spec, check_hlo=False).stream_combine(
+                n_estimate=128, score=False)
+            assert sr.complete and len(sr.trajectory) >= 2
+            out.append({{"M": M, "mesh": list(mesh),
+                         "t": time.perf_counter() - t0,
+                         "points": len(sr.trajectory)}})
+        print("MESH_ROWS=" + json.dumps(out))
+    """)
+    import repro
+
+    src_dir = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=4",
+        JAX_PLATFORMS="cpu",
+        PYTHONPATH=src_dir + os.pathsep + os.environ.get("PYTHONPATH", ""),
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"mesh stream bench subprocess failed (exit {proc.returncode}):\n"
+            f"{proc.stderr[-2000:]}"
+        )
+    line = [
+        ln for ln in proc.stdout.splitlines() if ln.startswith("MESH_ROWS=")
+    ][-1]
+    rows = []
+    for rec in json.loads(line[len("MESH_ROWS="):]):
+        rows.append(Row(
+            "stream", f"M={rec['M']}", "stream_total_mesh", rec["t"], "s",
+            f"mesh={tuple(rec['mesh'])} {rec['points']} trajectory points "
+            "(fused mesh hot path, forced-4-device subprocess)",
+        ))
+    return rows
+
+
 def run(full: bool = False) -> List[Row]:
     rows: List[Row] = []
     T = T_FULL if full else T_QUICK
@@ -114,4 +179,5 @@ def run(full: bool = False) -> List[Row]:
                         "subscriber-path stream_total / fused stream_total"))
         assert sr.complete and sf.complete
         assert len(sr.trajectory) >= 2 and len(sf.trajectory) >= 2
+    rows.extend(_mesh_rows(T))
     return rows

@@ -31,6 +31,13 @@ Quickstart::
 ``examples/`` and ``benchmarks/`` drive it programmatically.
 """
 
+from repro.api.backends import (  # noqa: F401
+    BackendId,
+    ChunkBackend,
+    MeshChunkBackend,
+    VmapChunkBackend,
+    get_chunk_backend,
+)
 from repro.api.pipeline import (  # noqa: F401
     LOG_L2_DIM,
     Pipeline,
@@ -73,9 +80,14 @@ def __getattr__(name: str):
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
+    "BackendId",
+    "ChunkBackend",
     "LOG_L2_DIM",
     "MatrixResult",
+    "MeshChunkBackend",
     "Pipeline",
+    "VmapChunkBackend",
+    "get_chunk_backend",
     "ResumableSample",
     "RunSpec",
     "SampleResult",

@@ -17,9 +17,17 @@ The returned :class:`MatrixResult` carries per-cell rows plus the compile
 accounting (``n_executables`` vs ``n_specs``) that
 ``tests/test_api.py::test_run_matrix_compiles_once_per_signature`` locks.
 
-This runner drives the single-device vmap backend (sweeps are a
-workstation/CI workflow); mesh execution belongs to
-:class:`repro.api.Pipeline`.
+Two execution backends (``backend=``):
+
+- ``"vmap"`` (default) — every cell runs on the single-device vmap path;
+- ``"mesh_fanout"`` — independent *cells* fan out over mesh slices: each
+  signature group stacks its pending cells along a leading axis and runs
+  one ``shard_map(vmap(cell))`` program over a 1-axis device mesh, with
+  the compiled HLO asserted collective-free (cells never talk to each
+  other — the paper's embarrassing parallelism, one level up).
+
+Either way, a spec carrying its *own* ``mesh_shape`` (sharding chains
+within a cell) is rejected — that belongs to :class:`repro.api.Pipeline`.
 
 CLI (the CI ``scenario-matrix`` smoke job)::
 
@@ -66,6 +74,7 @@ class MatrixResult(NamedTuple):
     n_executables: int  # distinct sampling programs compiled
     n_groundtruth_executables: int
     signatures: Dict[str, int]  # repr(signature) -> specs served
+    backend: str = "vmap"  # BackendId string of the sampling executor
 
     def table(self) -> str:
         head = f"{'spec_id':12s} {'model':8s} {'sampler':8s} {'combiner':16s} " \
@@ -79,8 +88,9 @@ class MatrixResult(NamedTuple):
                 f"{r['wall_s']:7.2f}"
             )
         lines.append(
-            f"# {self.n_specs} cells, {self.n_executables} sampling "
-            f"executables, {self.n_groundtruth_executables} groundtruth "
+            f"# {self.n_specs} cells on {self.backend}, "
+            f"{self.n_executables} sampling executables, "
+            f"{self.n_groundtruth_executables} groundtruth "
             "executables (compile-cache hits for the rest)"
         )
         return "\n".join(lines)
@@ -92,6 +102,7 @@ class MatrixResult(NamedTuple):
             "n_executables": self.n_executables,
             "n_groundtruth_executables": self.n_groundtruth_executables,
             "signatures": self.signatures,
+            "backend": self.backend,
         }
 
 
@@ -103,10 +114,14 @@ class ExecutableCache:
     def __init__(self):
         self.sample: Dict[Signature, Callable] = {}
         self.groundtruth: Dict[Signature, Callable] = {}
+        self._raw: Dict[Signature, Callable] = {}
 
-    def sample_fn(self, spec: RunSpec, model, padded: bool) -> Callable:
+    def raw_sample_fn(self, spec: RunSpec, model, padded: bool) -> Callable:
+        """The unjitted cell body ``(shards, counts, keys, step_size) ->
+        (theta, accept)`` — what ``sample_fn`` jits, and what the mesh
+        fan-out vmaps a second time over a leading *cell* axis."""
         sig = spec.executable_signature() + (padded,)
-        if sig not in self.sample:
+        if sig not in self._raw:
             sk = make_shard_kernel(
                 model,
                 spec.M,
@@ -126,7 +141,13 @@ class ExecutableCache:
                 in_axes = (_shard_axes(shards, model.shard_keys, 0, None), 0, 0)
                 return jax.vmap(one, in_axes=in_axes)(shards, counts, keys)
 
-            self.sample[sig] = jax.jit(run)
+            self._raw[sig] = run
+        return self._raw[sig]
+
+    def sample_fn(self, spec: RunSpec, model, padded: bool) -> Callable:
+        sig = spec.executable_signature() + (padded,)
+        if sig not in self.sample:
+            self.sample[sig] = jax.jit(self.raw_sample_fn(spec, model, padded))
         return self.sample[sig]
 
     def groundtruth_fn(self, spec: RunSpec, model) -> Callable:
@@ -151,11 +172,107 @@ class ExecutableCache:
         return self.groundtruth[sig]
 
 
+def _partitioned(spec: RunSpec, model, key, part_cache: Dict[Tuple, Tuple]):
+    """Data generation + partition, cached across cells that share them."""
+    part_key = (spec.model, spec.resolved_n(), spec.seed, spec.M)
+    if part_key not in part_cache:
+        data, _ = model.generate_data(key, spec.resolved_n())
+        shards, counts = partition_data(
+            data, spec.M, only=model.shard_keys, pad=True
+        )
+        part_cache[part_key] = (data, shards, counts)
+    return part_cache[part_key]
+
+
+def _fanout_sample(
+    specs: List[RunSpec],
+    execs: ExecutableCache,
+    part_cache: Dict[Tuple, Tuple],
+    draws_cache: Dict[Tuple, Tuple],
+    *,
+    verbose: bool = False,
+) -> int:
+    """mesh_fanout prepass: fill ``draws_cache`` for every distinct draw
+    cell, one ``shard_map(vmap(cell))`` program per signature group.
+
+    Cells in a group (same executable signature, distinct seed/step) stack
+    along a leading axis sharded ``P("data")`` over a 1-axis device mesh;
+    the group is padded to a device multiple by repeating the last cell.
+    Each compiled program's HLO is asserted collective-free — independent
+    cells must stay independent on the mesh. Returns the program count.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    from repro.distributed.epmcmc import assert_no_cross_chain_collectives
+
+    ndev = jax.device_count()
+    if ndev < 2:
+        raise ValueError(
+            "run_matrix(backend='mesh_fanout') needs >=2 visible devices "
+            f"but only {ndev} is — launch with e.g. "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+            "(or use backend='vmap')"
+        )
+
+    # group the *distinct* draw cells by signature (combiner-only sweeps
+    # collapse, exactly as on the vmap path)
+    groups: Dict[Signature, List[Tuple]] = {}
+    pending: set = set()
+    for spec in specs:
+        model = get_model(spec.model)
+        key = jax.random.PRNGKey(spec.seed)
+        _, shards, counts = _partitioned(spec, model, key, part_cache)
+        padded = is_padded(model, shards, counts, spec.resolved_sampler())
+        sig = spec.executable_signature() + (padded,)
+        draws_key = (sig, spec.seed, spec.step_size)
+        if draws_key in draws_cache or draws_key in pending:
+            continue
+        pending.add(draws_key)
+        keys = jax.random.split(jax.random.fold_in(key, 1), spec.M)
+        groups.setdefault(sig, []).append(
+            (draws_key, spec, model, padded,
+             (shards, counts, keys, jnp.float32(spec.step_size)))
+        )
+
+    mesh = jax.make_mesh((ndev,), ("data",))
+    sharding = NamedSharding(mesh, P("data"))
+    n_programs = 0
+    for sig, cells in groups.items():
+        spec, model, padded = cells[0][1], cells[0][2], cells[0][3]
+        raw = execs.raw_sample_fn(spec, model, padded)
+        n_cells = len(cells)
+        pad_to = -(-n_cells // ndev) * ndev
+        inputs = [c[4] for c in cells] + [cells[-1][4]] * (pad_to - n_cells)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *inputs)
+        stacked = jax.tree.map(lambda x: jax.device_put(x, sharding), stacked)
+        fan = shard_map(
+            jax.vmap(raw), mesh=mesh,
+            in_specs=(P("data"),) * 4, out_specs=P("data"),
+            check_rep=False,
+        )
+        compiled = jax.jit(fan).lower(*stacked).compile()
+        assert_no_cross_chain_collectives(compiled.as_text(), mesh)
+        n_programs += 1
+        theta, acc = jax.block_until_ready(compiled(*stacked))
+        for i, (draws_key, *_rest) in enumerate(cells):
+            draws_cache[draws_key] = (theta[i], acc[i])
+        if verbose:
+            print(
+                f"# fanout: {n_cells} cell(s) of signature "
+                f"{cells[0][1].spec_id}-group over {ndev} devices "
+                f"(padded to {pad_to})",
+                flush=True,
+            )
+    return n_programs
+
+
 def run_matrix(
     specs: Iterable[RunSpec],
     *,
     json_path: Optional[str] = None,
     verbose: bool = False,
+    backend: str = "vmap",
 ) -> MatrixResult:
     """Execute every spec; compile once per signature; return tidy rows.
 
@@ -164,16 +281,27 @@ def run_matrix(
     per-combiner streams off ``fold_in 3``), so a matrix cell and a
     standalone Pipeline over the same spec agree to the last-ulp fusion
     tolerance of tracing ``step_size`` instead of closing over it.
+
+    ``backend="mesh_fanout"`` runs the sampling stage of independent cells
+    in parallel over mesh slices (see :func:`_fanout_sample`); groundtruth
+    chains and combine/score stay host-sequential either way, and the RNG
+    discipline is identical, so a fanout sweep scores the same cells.
     """
+    if backend not in ("vmap", "mesh_fanout"):
+        raise ValueError(
+            f"unknown run_matrix backend {backend!r} — expected 'vmap' or "
+            "'mesh_fanout'"
+        )
     specs = [s.validate() for s in specs]
     for spec in specs:
         if spec.mesh_shape is not None:
-            # Pipeline raises for the same silent downgrade; a sweep must not
-            # quietly drop the shard_map/HLO-assert request either
+            # Pipeline owns within-cell meshes; a sweep must not quietly
+            # drop the shard_map/HLO-assert request (mesh_fanout shards
+            # whole cells, never the chains inside one)
             raise ValueError(
                 f"spec {spec.spec_id}: run_matrix drives the vmap backend "
-                f"only — mesh_shape={spec.mesh_shape} belongs to "
-                "repro.api.Pipeline"
+                f"only within a cell — mesh_shape={spec.mesh_shape} belongs "
+                "to repro.api.Pipeline"
             )
     execs = ExecutableCache()
     draws_cache: Dict[Tuple, Tuple] = {}  # (sig, seed, step) -> (theta, acc)
@@ -182,20 +310,21 @@ def run_matrix(
     rows: List[Dict[str, Any]] = []
     signatures: Dict[str, int] = {}
 
+    n_fanout = 0
+    if backend == "mesh_fanout":
+        # batch-sample every distinct draw cell up front; the per-spec loop
+        # below then cache-hits on draws and only runs gt + combine + score
+        n_fanout = _fanout_sample(
+            specs, execs, part_cache, draws_cache, verbose=verbose
+        )
+
     for spec in specs:
         t0 = time.time()
         model = get_model(spec.model)
         key = jax.random.PRNGKey(spec.seed)
         # data generation + partition reused across cells differing only in
         # sampler/combiner/step — cache-hit cells' wall_s stays honest
-        part_key = (spec.model, spec.resolved_n(), spec.seed, spec.M)
-        if part_key not in part_cache:
-            data, _ = model.generate_data(key, spec.resolved_n())
-            shards, counts = partition_data(
-                data, spec.M, only=model.shard_keys, pad=True
-            )
-            part_cache[part_key] = (data, shards, counts)
-        data, shards, counts = part_cache[part_key]
+        data, shards, counts = _partitioned(spec, model, key, part_cache)
         padded = is_padded(model, shards, counts, spec.resolved_sampler())
         sig = spec.executable_signature() + (padded,)
         signatures[repr(sig)] = signatures.get(repr(sig), 0) + 1
@@ -249,12 +378,20 @@ def run_matrix(
             print(f"# cell {spec.spec_id} ({spec.model}/{spec.resolved_sampler()}) "
                   f"done in {time.time() - t0:.1f}s", flush=True)
 
+    from repro.api.backends import BackendId  # late: backends pulls sampling
+
+    backend_id = (
+        BackendId.mesh_fanout(jax.device_count())
+        if backend == "mesh_fanout"
+        else BackendId.vmap()
+    )
     result = MatrixResult(
         rows=rows,
         n_specs=len(specs),
-        n_executables=len(execs.sample),
+        n_executables=len(execs.sample) + n_fanout,
         n_groundtruth_executables=len(execs.groundtruth),
         signatures=signatures,
+        backend=backend_id,
     )
     if json_path is not None:
         path = _json_path(json_path)
@@ -289,6 +426,10 @@ def main(argv=None) -> MatrixResult:
         help="scoreboard distance (logl2 keeps narrow posteriors finite)",
     )
     ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument(
+        "--backend", default="vmap", choices=("vmap", "mesh_fanout"),
+        help="mesh_fanout shards independent cells over visible devices",
+    )
     args = ap.parse_args(argv)
 
     split = lambda s: tuple(x for x in s.split(",") if x)
@@ -304,7 +445,9 @@ def main(argv=None) -> MatrixResult:
             split(args.combiners), split(args.seeds),
         )
     ]
-    result = run_matrix(specs, json_path=args.json, verbose=True)
+    result = run_matrix(
+        specs, json_path=args.json, verbose=True, backend=args.backend
+    )
     print(result.table())
     return result
 

@@ -18,17 +18,22 @@ groundtruth ``fold_in(key, 2)``, one independent stream per combiner from
 produces bitwise-identical artifacts.
 
 The sampling stage always runs the chunk-emitting driver of
-:mod:`repro.api.streaming` on the vmap backend: chunks of
-``spec.stream_every`` draws (one T-sized chunk when 0) land in order, and
-everything else subscribes — checkpoint persistence (``checkpoint_dir`` /
-``checkpoint_every``, resume mid-chain bitwise), and **combine-while-
-sampling** via :meth:`Pipeline.stream_combine`, which folds every landed
-chunk into the requested streaming combiners
+:mod:`repro.api.streaming`: chunks of ``spec.stream_every`` draws (one
+T-sized chunk when 0) land in order, and everything else subscribes —
+checkpoint persistence (``checkpoint_dir`` / ``checkpoint_every``, resume
+mid-chain bitwise), and **combine-while-sampling** via
+:meth:`Pipeline.stream_combine`, which folds every landed chunk into the
+requested streaming combiners
 (:func:`repro.core.combiners.get_streaming_combiner`), records a per-chunk
 scoreboard trajectory, and finalizes estimates that are bitwise the
-gather-then-combine result for the buffered combiners. The one exception is
-the mesh backend: specs that ``shard_map`` over >1 device keep the one-shot
-program so the compiled HLO can still be asserted collective-free.
+gather-then-combine result for the buffered combiners. Which *execution
+backend* emits the chunks is a :mod:`repro.api.backends` decision: the
+vmap backend on one device, or — ``mesh_shape`` (explicit or the >1-device
+auto-mesh) — the mesh chunk backend, which ``shard_map``\\ s the same chunk
+programs over chain groups and asserts each compiled program's HLO
+collective-free across chains. A mesh spec with no stream/checkpoint
+request keeps the historical one-shot ``shard_map`` program
+(whole-chain HLO assert, ``backend="shard_map(N devices)"``).
 
 The batch combination stage dispatches through
 :func:`repro.distributed.epmcmc.combine_gathered` — the same registry-name
@@ -142,7 +147,8 @@ class SubposteriorDraws(NamedTuple):
     theta: jnp.ndarray  # (M, T, d) shared-θ draws
     accept: jnp.ndarray  # (M,) mean acceptance per chain
     counts: jnp.ndarray  # (M,)
-    backend: str  # "vmap[chunked]" | "vmap[fused]" | "vmap[resumable]" | "shard_map(...)"
+    backend: str  # a repro.api.backends.BackendId string ("vmap[chunked]",
+    # "shard_map[fused](4 devices)", ...) — never assembled ad hoc
     collectives_checked: Optional[int]
     t_done: int  # draws collected so far (== T unless interrupted)
     complete: bool
@@ -260,11 +266,14 @@ class Pipeline:
         see every landed ``(M, C, d)`` chunk in order, restored prefixes
         included (:meth:`stream_combine` is the built-in subscriber).
 
-        Backend routing: the chunked vmap driver
-        (:func:`repro.api.streaming.stream_sample`) everywhere, except
-        specs that ``shard_map`` over >1 device with no checkpoint/stream
-        request — those keep the one-shot program whose compiled HLO is
-        asserted collective-free.
+        Backend routing: the chunk-emitting driver
+        (:func:`repro.api.streaming.stream_sample`) everywhere, on the
+        backend the spec's ``mesh_shape`` selects (explicit, or the
+        >1-device auto-mesh when M divides evenly): mesh specs that
+        stream/checkpoint run the chunked mesh backend with per-program HLO
+        asserts; mesh specs with no stream/checkpoint request keep the
+        historical one-shot ``shard_map`` program and its whole-chain HLO
+        assert.
         """
         if self._draws is not None and self._draws.complete:
             return self._draws
@@ -274,29 +283,14 @@ class Pipeline:
             or self.checkpoint_dir is not None
             or bool(on_chunk)
         )
-        if spec.mesh_shape is not None and wants_stream:
-            raise ValueError(
-                "checkpointed/streaming sampling runs the chunked vmap "
-                f"backend only — a spec with mesh_shape={spec.mesh_shape} "
-                "would silently lose its shard_map/HLO-assert request; "
-                "drop one of the two"
-            )
         sharded = self.partition()
         t0 = time.time()
         ndev = jax.device_count()
-        auto_mesh = spec.mesh_shape is None and ndev > 1 and spec.M % ndev == 0
-        if auto_mesh and wants_stream:
-            # an explicit mesh_shape raises above; the implicit one only
-            # warns — but must not silently walk off the multi-device cliff
-            import warnings
-
-            warnings.warn(
-                f"streaming/checkpointed sampling runs the chunked vmap "
-                f"backend on one device — the {ndev}-device auto-mesh this "
-                "spec would otherwise shard_map over is bypassed",
-                stacklevel=2,
-            )
-        if (spec.mesh_shape is not None or auto_mesh) and not wants_stream:
+        mesh_shape = spec.mesh_shape
+        if mesh_shape is None and ndev > 1 and spec.M % ndev == 0:
+            mesh_shape = (ndev, 1)
+        use_mesh = mesh_shape is not None and mesh_shape[0] > 1
+        if use_mesh and not wants_stream:
             if max_steps is not None:
                 raise ValueError(
                     "max_steps needs a checkpoint_dir: a partial sampling "
@@ -314,7 +308,7 @@ class Pipeline:
                 step_size=spec.step_size,
                 sgld_batch=spec.sgld_batch,
                 check_hlo=self.check_hlo,
-                mesh_shape=spec.mesh_shape,
+                mesh_shape=mesh_shape,
                 sampler_options=spec.sampler_options,
                 shards=sharded.shards,
                 counts=sharded.counts,
@@ -346,6 +340,8 @@ class Pipeline:
                 checkpoint_every=self.checkpoint_every,
                 spec_id=spec.spec_id,
                 on_chunk=on_chunk,
+                mesh_shape=mesh_shape if use_mesh else None,
+                check_hlo=self.check_hlo,
             )
             res, t_done, complete = rs.result, rs.t_done, rs.complete
         self.timings["sample_s"] = self.timings.get("sample_s", 0.0) + (

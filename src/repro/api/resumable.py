@@ -76,6 +76,8 @@ def sample_subposteriors_resumable(
     counts: Optional[jax.Array] = None,
     chunk_size: int = 0,
     on_chunk: Sequence[Callable[[StreamChunk], None]] = (),
+    mesh_shape: Optional[tuple] = None,
+    check_hlo: bool = True,
 ) -> ResumableSample:
     """Run (or resume) the parallel sampling stage with chunked persistence.
 
@@ -89,7 +91,10 @@ def sample_subposteriors_resumable(
     durable work). A later call with the same ``checkpoint_dir``/``spec_id``
     picks up where this one stopped; a directory owned by a different
     ``spec_id`` raises; ``on_chunk`` subscribers see every chunk, restored
-    prefix included (``replayed=True``).
+    prefix included (``replayed=True``). ``mesh_shape`` selects the
+    :mod:`repro.api.backends` execution backend — checkpointing works
+    unchanged on the mesh (saves land host-side, restores are re-committed
+    to the mesh).
     """
     ss = stream_sample(
         key,
@@ -111,6 +116,8 @@ def sample_subposteriors_resumable(
         checkpoint_every=checkpoint_every,
         spec_id=spec_id,
         on_chunk=on_chunk,
+        mesh_shape=mesh_shape,
+        check_hlo=check_hlo,
     )
     return ResumableSample(
         result=ss.result,

@@ -45,7 +45,7 @@ class SampleResult(NamedTuple):
     theta: jnp.ndarray  # (M, T, d) shared-θ subposterior draws
     accept: jnp.ndarray  # (M,) mean acceptance per chain
     counts: jnp.ndarray  # (M,) real data rows per shard (pad=True convention)
-    backend: str  # "vmap" | "shard_map(<ndev> devices)" | "vmap[resumable]"
+    backend: str  # a repro.api.backends.BackendId string
     collectives_checked: Optional[int]  # HLO collectives verified chain-local
 
 
@@ -338,6 +338,9 @@ def sample_subposteriors(
     in_axes = (_shard_axes(shards, model.shard_keys, 0, None), 0, 0)
     vmapped = jax.vmap(one_shard, in_axes=in_axes)
 
+    # late import: backends imports this module (kernel layer) at load time
+    from repro.api.backends import BackendId
+
     ndev = jax.device_count()
     if mesh_shape is None and ndev > 1 and num_shards % ndev == 0:
         mesh_shape = (ndev, 1)
@@ -346,10 +349,10 @@ def sample_subposteriors(
             vmapped, shards, counts, keys, model, mesh_shape, check_hlo
         )
         return SampleResult(
-            theta, acc, counts, f"shard_map({mesh_shape[0]} devices)", checked
+            theta, acc, counts, BackendId.mesh(mesh_shape[0]), checked
         )
     theta, acc = jax.jit(vmapped)(shards, counts, keys)
-    return SampleResult(theta, acc, counts, "vmap", None)
+    return SampleResult(theta, acc, counts, BackendId.vmap(), None)
 
 
 def is_padded(model, shards, counts, sampler) -> bool:

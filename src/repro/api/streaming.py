@@ -16,9 +16,15 @@ The bitwise-resume guarantee is unchanged and structural: per-step RNG keys
 are a pure function of the seed, chunk boundaries are global multiples of
 the cadence, and sessions advance in whole chunks — so an interrupted-then-
 resumed run replays exactly the same chunk programs on the same inputs as
-one that never stopped. The mesh (``shard_map``) backend intentionally stays
-on the one-shot path in :mod:`repro.api.sampling`: its value is the compiled
-whole-chain HLO collective assert, and it does not checkpoint or stream.
+one that never stopped.
+
+Execution is delegated to a pluggable :mod:`repro.api.backends`
+:class:`~repro.api.backends.ChunkBackend`: the vmap backend on one device,
+or — ``mesh_shape=`` with a data axis > 1 — the mesh backend, which
+``shard_map``\\ s the *same* chunk programs over chain groups and asserts
+every compiled program's HLO collective-free across chains (per chunk
+shape, and for the fused whole-run program). Checkpointing, streaming
+combination, and the fused fold subscribe identically on either backend.
 
 Fused hot path: when nobody subscribes (no checkpointing, no ``on_chunk``,
 no budget) a chunked run pays the host loop for nothing — every chunk is a
@@ -56,14 +62,17 @@ import jax.numpy as jnp
 from repro.checkpoint import latest_step, restore, save
 from repro.core.subposterior import partition_data
 from repro.models.bayes import BayesModel
-from repro.samplers.adaptation import warmup_chain
-from repro.api.sampling import (
-    SampleResult,
-    ShardKernel,
-    _shard_axes,
-    is_padded,
-    make_shard_kernel,
+from repro.api.backends import (  # noqa: F401  (historical homes re-exported)
+    CHUNKED,
+    FUSED,
+    RESUMABLE,
+    BackendId,
+    _chunk_one,
+    _freeze_options,
+    _setup_one,
+    get_chunk_backend,
 )
+from repro.api.sampling import SampleResult, ShardKernel, is_padded
 
 PyTree = Any
 
@@ -89,76 +98,20 @@ class StreamChunk(NamedTuple):
     replayed: bool = False  # True when re-emitted from restored draws
 
 
-def _setup_one(sk: ShardKernel, shard, count, key, *, burn_in, warmup, step_size):
-    """Warmup + burn-in for one shard; mirrors ``run_shard_chain``'s RNG
-    discipline exactly so chunked draws match the one-shot path bitwise."""
-    k_init, k_run = jax.random.split(key)
-    pos0 = sk.init_position(k_init, shard)
-    if sk.adaptive and warmup > 0:
-        k_run, k_warm = jax.random.split(k_run)
-        kernel, pos0, eps = warmup_chain(
-            k_warm,
-            lambda e: sk.build(shard, count, e),
-            pos0,
-            warmup,
-            initial_step_size=step_size,
-            target_accept=sk.target_accept,
-        )
-        burn = burn_in
-    else:
-        eps = jnp.asarray(step_size, jnp.float32)
-        kernel = sk.build(shard, count, step_size)
-        burn = burn_in + (0 if sk.adaptive else warmup)
-    state = kernel.init(pos0)
-    if burn > 0:
-        keys = jax.random.split(k_run, burn + 1)
-        k_run = keys[0]
-
-        def warm(s, k):
-            s, _ = kernel.step(k, s)
-            return s, None
-
-        state, _ = jax.lax.scan(warm, state, keys[1:])
-    return state, eps, k_run
-
-
-def _chunk_one(sk: ShardKernel, shard, count, eps, state, keys):
-    """Advance one chain by ``len(keys)`` draws from a live kernel state."""
-    kernel = sk.build(shard, count, eps)
-
-    def collect(s, k):
-        s, info = kernel.step(k, s)
-        return s, (s.position, info.is_accepted)
-
-    state, (pos, acc) = jax.lax.scan(collect, state, keys)
-    return state, sk.extract(pos), acc.astype(jnp.float32).sum()
-
-
-# Per-process cache of the jitted setup/chunk programs, keyed by their
-# compile-relevant statics (run_matrix-style compile hygiene): a serving
-# loop that instantiates one Pipeline per request re-traces nothing, and
-# the bench's warm runs measure dataflow rather than tracing. Registry
-# entries are immutable in-process, so a (model, sampler, options) key
-# pins the kernel closures exactly.
-_EXEC_CACHE: Dict[Tuple, Tuple[Any, Any]] = {}
-# fused whole-run sampling programs: _EXEC_CACHE key + (T, chunk)
+# fused whole-run sampling programs: backend cache key + (T, chunk)
 _FUSED_SAMPLE_CACHE: Dict[Tuple, Any] = {}
 # fused combine-fold programs: (combiner names, chunking, shapes, options)
 _FUSED_FOLD_CACHE: Dict[Tuple, Any] = {}
 
 
-def _freeze_options(options) -> Tuple:
-    items = options.items() if hasattr(options, "items") else options
-    return tuple(sorted((str(k), v) for k, v in items))
-
-
 class ShardChainStream:
     """M parallel subposterior chains, advanced in global chunks.
 
-    Owns the per-shard kernels, the jitted setup (init + warmup + burn-in)
-    and chunk programs (shared across instances via the executable cache),
-    and the per-step collect keys (a pure function of the seed — identical
-    on every session, whatever the chunking).
+    Owns the resolved :class:`~repro.api.backends.ChunkBackend` (the jitted
+    setup and chunk programs, shared across instances via the backend
+    cache), the mesh-committed stage inputs, and the per-step collect keys
+    (a pure function of the seed — identical on every session, whatever the
+    chunking).
     """
 
     def __init__(
@@ -177,48 +130,33 @@ class ShardChainStream:
         shards: PyTree,
         counts: jnp.ndarray,
         use_counts: bool,
+        mesh_shape: Optional[Tuple[int, int]] = None,
+        check_hlo: bool = True,
     ):
         self.model = model
         self.num_shards = num_shards
         self.num_samples = num_samples
-        self.shards = shards
-        self.counts = counts
-        self.keys = jax.random.split(key, num_shards)
         sampler = sampler or model.default_sampler
-        cache_key = (
-            model.name, sampler, num_shards, warmup, burn_in,
-            float(step_size), sgld_batch, _freeze_options(sampler_options),
-            use_counts,
+        self.backend = get_chunk_backend(
+            model,
+            num_shards,
+            sampler,
+            warmup=warmup,
+            burn_in=burn_in,
+            step_size=step_size,
+            sgld_batch=sgld_batch,
+            sampler_options=sampler_options,
+            use_counts=use_counts,
+            shards=shards,
+            mesh_shape=mesh_shape,
+            check_hlo=check_hlo,
         )
-        self._cache_key = cache_key
-        cached = _EXEC_CACHE.get(cache_key)
-        if cached is None:
-            sk = make_shard_kernel(
-                model,
-                num_shards,
-                sampler,
-                sgld_batch=sgld_batch,
-                use_counts=use_counts,
-                sampler_options=sampler_options,
-            )
-            axes = _shard_axes(shards, model.shard_keys, 0, None)
-            setup = jax.jit(
-                jax.vmap(
-                    functools.partial(
-                        _setup_one, sk,
-                        burn_in=burn_in, warmup=warmup, step_size=step_size,
-                    ),
-                    in_axes=(axes, 0, 0),
-                )
-            )
-            chunk_fn = jax.jit(
-                jax.vmap(
-                    functools.partial(_chunk_one, sk),
-                    in_axes=(axes, 0, 0, 0, 0),
-                )
-            )
-            cached = _EXEC_CACHE[cache_key] = (setup, chunk_fn)
-        self.setup, self.chunk_fn = cached
+        self._cache_key = self.backend.cache_key
+        self.setup = self.backend.setup
+        self.chunk_fn = self.backend.next_chunk
+        self.shards, self.counts, self.keys = self.backend.prepare(
+            shards, counts, jax.random.split(key, num_shards)
+        )
 
     def setup_struct(self):
         """Abstract ``(state, eps, k_collect)`` shapes — the restore template."""
@@ -286,8 +224,14 @@ class ShardChainStream:
         return prog
 
     def fused_sample(self, chunk: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Run the fused whole-run program on this stream's inputs."""
-        return self.fused_program(chunk)(self.shards, self.counts, self.keys)
+        """Run the fused whole-run program on this stream's inputs via the
+        backend's compilation strategy (the mesh backend AOT-compiles and
+        asserts the whole-run HLO collective-free before executing)."""
+        prog_key = self._cache_key + (self.num_samples, int(chunk))
+        return self.backend.run_fused(
+            prog_key, self.fused_program(chunk),
+            self.shards, self.counts, self.keys,
+        )
 
     def chunks(
         self,
@@ -330,7 +274,13 @@ class ShardChainStream:
                 "accept_sum": carry["accept_sum"] + acc_c,
             }
             t0, t_done = t_done, t1
-            yield StreamChunk(theta_c, acc_c, t0, t1, T, carry)
+            # emitted chunks leave the backend's device layout (mesh
+            # sharding must not leak into subscriber/combiner numerics)
+            yield StreamChunk(
+                self.backend.localize(theta_c),
+                self.backend.localize(acc_c),
+                t0, t1, T, carry,
+            )
 
 
 class StreamedSample(NamedTuple):
@@ -380,6 +330,8 @@ def stream_sample(
     checkpoint_every: int = 0,
     spec_id: str = "",
     on_chunk: Sequence[Callable[[StreamChunk], None]] = (),
+    mesh_shape: Optional[Tuple[int, int]] = None,
+    check_hlo: bool = True,
 ) -> StreamedSample:
     """Run (or resume) the parallel sampling stage as one chunked stream.
 
@@ -392,6 +344,12 @@ def stream_sample(
     ``checkpoint_every`` boundary (which must be a multiple of the chunk
     cadence) and a later call resumes mid-chain bitwise; ``max_steps``
     bounds the draws collected this call (whole chunks only).
+
+    ``mesh_shape`` with a data axis > 1 runs every chunk on the
+    :class:`~repro.api.backends.MeshChunkBackend` — same streaming,
+    checkpointing, and fused semantics, with each compiled program's HLO
+    asserted collective-free across chain groups (``check_hlo=False`` skips
+    the assert).
     """
     chunk = chunk_size if chunk_size > 0 else checkpoint_every
     if checkpoint_every > 0 and chunk_size > 0 and checkpoint_every % chunk_size:
@@ -432,6 +390,8 @@ def stream_sample(
         shards=shards,
         counts=counts,
         use_counts=padded,
+        mesh_shape=mesh_shape,
+        check_hlo=check_hlo,
     )
 
     # -- fused hot path: nobody subscribes, nothing to persist ---------------
@@ -449,8 +409,8 @@ def stream_sample(
                 theta,
                 accept_sum / jnp.maximum(num_samples, 1),
                 counts,
-                "vmap[fused]",
-                None,
+                stream.backend.backend_id(FUSED),
+                stream.backend.collectives_checked,
             ),
             t_done=num_samples,
             total=num_samples,
@@ -463,6 +423,9 @@ def stream_sample(
         carry, meta = _restore_carry(
             checkpoint_dir, step, stream.setup_struct(), model.d, num_shards
         )
+        # checkpoints restore as host arrays; the mesh backend re-commits
+        # them to its devices (a no-op on the vmap backend)
+        carry = stream.backend.put_carry(carry)
         if meta.get("spec_id") != spec_id or meta.get("T") != num_samples:
             raise ValueError(
                 f"checkpoint at {checkpoint_dir} belongs to spec "
@@ -499,8 +462,8 @@ def stream_sample(
             for r0 in range(0, t_done, replay_chunk):
                 r1 = min(r0 + replay_chunk, t_done)
                 ev = StreamChunk(
-                    carry["theta"][:, r0:r1], zeros, r0, r1, num_samples,
-                    carry, replayed=True,
+                    stream.backend.localize(carry["theta"][:, r0:r1]),
+                    zeros, r0, r1, num_samples, carry, replayed=True,
                 )
                 for sub in on_chunk:
                     sub(ev)
@@ -541,9 +504,14 @@ def stream_sample(
             )
 
     accept = carry["accept_sum"] / jnp.maximum(t_done, 1)
-    backend = "vmap[resumable]" if checkpoint_dir is not None else "vmap[chunked]"
+    backend = stream.backend.backend_id(
+        RESUMABLE if checkpoint_dir is not None else CHUNKED
+    )
     return StreamedSample(
-        result=SampleResult(carry["theta"], accept, counts, backend, None),
+        result=SampleResult(
+            carry["theta"], accept, counts, backend,
+            stream.backend.collectives_checked,
+        ),
         t_done=t_done,
         total=num_samples,
         resumed_from=resumed_from,

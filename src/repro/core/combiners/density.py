@@ -19,12 +19,16 @@ the scale estimate.
 
 from __future__ import annotations
 
+import math
+
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-_LOG2PI = jnp.log(2.0 * jnp.pi)
+# host-side, not jnp.log(...): module import must not run a JAX
+# computation (jax.distributed.initialize refuses to start after one)
+_LOG2PI = math.log(2.0 * math.pi)
 
 
 def masked_silverman(samples: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:

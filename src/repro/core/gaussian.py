@@ -14,12 +14,16 @@ Two parameterizations are provided:
 
 from __future__ import annotations
 
+import math
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-_LOG2PI = jnp.log(2.0 * jnp.pi)
+# a host-side constant, NOT jnp.log(...): importing this module must not run
+# a JAX computation — jax.distributed.initialize() (repro.api.launch) refuses
+# to start after one, and import must stay launch-safe
+_LOG2PI = math.log(2.0 * math.pi)
 
 
 class GaussianMoments(NamedTuple):

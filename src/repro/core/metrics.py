@@ -15,6 +15,8 @@ CPU tests stay in memory.
 
 from __future__ import annotations
 
+import math
+
 from functools import partial
 from typing import Optional
 
@@ -23,7 +25,9 @@ import jax.numpy as jnp
 
 from repro.core import bandwidth as bw
 
-_LOG2PI = jnp.log(2.0 * jnp.pi)
+# host-side, not jnp.log(...): module import must not run a JAX
+# computation (jax.distributed.initialize refuses to start after one)
+_LOG2PI = math.log(2.0 * math.pi)
 
 
 def log_mean_gaussian_cross(

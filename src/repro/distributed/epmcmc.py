@@ -581,8 +581,11 @@ def assert_no_cross_chain_collectives(
 
     Device ids on our mesh are row-major over (pod?, data, model), so the
     chain coordinate of device i is ``i // model_size``. Returns the number
-    of collectives checked (all confined to the model axis)."""
-    model = mesh.shape["model"]
+    of collectives checked (all confined to the model axis). Meshes without
+    a ``model`` axis (e.g. the ``run_matrix`` cell-fanout mesh, where the
+    data axis indexes whole cells) treat every device as its own chain
+    group — any cross-device collective fails."""
+    model = dict(mesh.shape).get("model", 1)
     checked = 0
     for kind, groups in collective_groups(hlo_text):
         if kind in allow_kinds:

@@ -18,11 +18,15 @@ per-model step constants.
 
 The sampling stage runs vmapped on one device, or — given >1 device (e.g.
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4``) — ``shard_map``-ped
-over the ``data`` axis of a mesh, one chain group per device. Either way the
-stage contains zero cross-chain collectives; on the mesh path this is
-*asserted on the compiled HLO* via
+over the ``data`` axis of a mesh, one chain group per device
+(``--mesh-shape``, or automatic when the device count divides ``--M``).
+Either way the stage contains zero cross-chain collectives; on the mesh
+path this is *asserted on the compiled HLO* via
 :func:`repro.distributed.epmcmc.assert_no_cross_chain_collectives` — the
-paper's "embarrassingly parallel" claim, machine-checked per run.
+paper's "embarrassingly parallel" claim, machine-checked per run. Since the
+:mod:`repro.api.backends` unification the mesh composes with
+``--stream-every`` and ``--checkpoint-dir``: chunk programs run on the mesh
+and every chunk program's HLO is asserted the same way.
 
 The sampling engine itself lives in :mod:`repro.api.sampling`; the historical
 module-level names (``make_shard_sampler``, ``sample_subposteriors``,
@@ -71,9 +75,20 @@ def __getattr__(name: str):
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
+def _parse_mesh(arg):
+    """``"4,1"`` → ``(4, 1)``; ``""``/None → None (vmap or auto-mesh)."""
+    if not arg:
+        return None
+    parts = tuple(int(x) for x in arg.split(","))
+    if len(parts) == 1:
+        parts = parts + (1,)
+    return parts
+
+
 def build_spec(args: argparse.Namespace) -> RunSpec:
     """The whole adapter: argparse namespace → declarative RunSpec."""
     return RunSpec(
+        mesh_shape=_parse_mesh(getattr(args, "mesh_shape", None)),
         model=args.model,
         sampler=args.sampler,
         combiner=args.combiner,
@@ -137,6 +152,13 @@ def main(argv=None) -> dict:
         "--stream-every", type=int, default=0,
         help="combine-while-sampling: fold every N landed draws into the "
         "streaming combiners and print the scoreboard trajectory (0 = off)",
+    )
+    ap.add_argument(
+        "--mesh-shape", default=None, metavar="NDATA[,NMODEL]",
+        help="shard chains over a device mesh (e.g. 4,1 with "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=4); composes "
+        "with --stream-every and --checkpoint-dir via the mesh chunk "
+        "backend (default: auto-mesh when >1 device divides M)",
     )
     args = ap.parse_args(argv)
 

@@ -156,9 +156,12 @@ def test_max_steps_requires_a_chunk_cadence(tmp_path):
         )
 
 
-def test_checkpointed_pipeline_rejects_mesh_specs(tmp_path):
+def test_mesh_specs_with_checkpointing_need_devices_not_a_fork(tmp_path):
+    """Mesh + checkpointing is supported since the backend unification —
+    the only remaining failure mode is a genuine resource problem, and the
+    error must say how to fix it (the old path raised unconditionally)."""
     spec = RunSpec(**{**SPEC.to_dict(), "mesh_shape": (4, 1)})
-    with pytest.raises(ValueError, match="vmap backend only"):
+    with pytest.raises(ValueError, match="devices but only"):
         Pipeline(spec, checkpoint_dir=tmp_path).sample()
 
 
@@ -223,7 +226,7 @@ def test_run_matrix_compiles_once_per_signature(tmp_path):
     assert len(res.rows) == 8
     assert all(r["error"] == r["error"] for r in res.rows)
     assert (tmp_path / "matrix.json").exists()
-    assert "8 cells, 2 sampling executables" in res.table()
+    assert "8 cells on vmap, 2 sampling executables" in res.table()
 
 
 def test_run_matrix_agrees_with_pipeline(pipeline):

@@ -1,0 +1,115 @@
+"""The multi-controller launch path (``python -m repro.api.launch``).
+
+A real 2-process ``jax.distributed`` run on CPU: two subprocesses rendezvous
+at a local coordinator, each samples its half of the chains, and only the
+moments-backed combine state crosses processes (through the coordinator's
+key-value store — CPU hosts cannot run multi-process XLA collectives at
+all). Rank 0's result record must reproduce a single-process run of the
+same spec **bitwise**: every chain runs through the same width-1 chunk
+programs whatever the rank count (a vmap over 2 vs 4 chains fuses
+differently at the ulp level, and rejection loops amplify one flipped
+comparison into a divergent chain — see run_launch), and the combine-state
+merge is exact concatenation in rank order.
+"""
+
+import json
+import os
+import socket
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SPEC_ARGS = [
+    "--model", "poisson", "--sampler", "gibbs", "--M", "4", "--T", "60",
+    "--warmup", "0", "--n", "512", "--stream-every", "20",
+]
+
+
+def _env():
+    import repro
+
+    src_dir = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+    env = dict(
+        os.environ,
+        JAX_PLATFORMS="cpu",
+        PYTHONPATH=src_dir + os.pathsep + os.environ.get("PYTHONPATH", ""),
+    )
+    env.pop("XLA_FLAGS", None)  # single device per process, like real hosts
+    return env
+
+
+def _run_launch(extra, timeout=600):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.api.launch", *SPEC_ARGS, *extra],
+        capture_output=True, text=True, env=_env(), timeout=timeout,
+    )
+
+
+def _free_port():
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+@pytest.fixture(scope="module")
+def records(tmp_path_factory):
+    d = tmp_path_factory.mktemp("launch")
+    one, two = d / "one.json", d / "two.json"
+
+    proc1 = _run_launch(["--json", str(one)])
+    assert proc1.returncode == 0, proc1.stderr[-4000:]
+
+    port = _free_port()
+    coord = ["--coordinator", f"localhost:{port}", "--num-processes", "2"]
+    rank1 = subprocess.Popen(
+        [sys.executable, "-m", "repro.api.launch", *SPEC_ARGS, *coord,
+         "--process-id", "1"],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=_env(),
+    )
+    rank0 = _run_launch([*coord, "--process-id", "0", "--json", str(two)])
+    out1, err1 = rank1.communicate(timeout=600)
+    assert rank0.returncode == 0, rank0.stderr[-4000:]
+    assert rank1.returncode == 0, err1[-4000:]
+
+    with open(one) as f:
+        single = json.load(f)
+    with open(two) as f:
+        double = json.load(f)
+    return single, double
+
+
+def test_backend_strings(records):
+    single, double = records
+    assert single["backend"] == "jax.distributed(1 processes)"
+    assert double["backend"] == "jax.distributed(2 processes)"
+    assert double["num_processes"] == 2
+
+
+def test_two_process_result_matches_single_process(records):
+    single, double = records
+    assert double["spec_id"] == single["spec_id"]  # same declared experiment
+    assert double["accept"] == pytest.approx(single["accept"], abs=1e-6)
+    s1 = np.asarray(single["combined"]["online"]["samples"])
+    s2 = np.asarray(double["combined"]["online"]["samples"])
+    assert s1.shape == s2.shape
+    # width-1 chunk programs make execution rank-count-invariant, and the
+    # KV-store state merge is exact concatenation — so bitwise, not close
+    np.testing.assert_array_equal(s2, s1)
+    np.testing.assert_array_equal(
+        np.asarray(double["combined"]["online"]["mean"]),
+        np.asarray(single["combined"]["online"]["mean"]),
+    )
+
+
+def test_launch_rejects_unlaunchable_combiners():
+    proc = _run_launch(["--combiner", "parametric"])
+    assert proc.returncode != 0
+    assert "moments-backed" in proc.stderr
+
+
+def test_multi_process_needs_a_coordinator():
+    proc = _run_launch(["--num-processes", "2", "--process-id", "0"])
+    assert proc.returncode != 0
+    assert "coordinator" in proc.stderr.lower()

@@ -291,9 +291,14 @@ def test_max_steps_budget_is_durable_with_finer_stream_chunks(tmp_path):
     assert latest_step(tmp_path) == 40  # the budgeted work is durable
 
 
-def test_mesh_specs_reject_streaming():
+def test_mesh_streaming_needs_devices_not_a_fork():
+    """Mesh specs stream since the backend unification (the old driver
+    raised 'vmap backend only' unconditionally). On a single-device host
+    the only failure left is missing devices, and the error must name the
+    fix; the positive mesh-streaming path is covered in
+    tests/test_mesh_stream.py under a forced multi-device subprocess."""
     spec = dataclasses.replace(STREAM_SPECS["linear"], mesh_shape=(4, 1))
-    with pytest.raises(ValueError, match="vmap"):
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
         Pipeline(spec).stream_combine()
 
 
