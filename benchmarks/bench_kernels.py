@@ -16,8 +16,13 @@ import jax.numpy as jnp
 
 from benchmarks.common import Row, block, timed
 from repro.core.combiners import get_combiner
+from repro.kernels import default_interpret
 from repro.kernels.img_weights import img_log_weights, img_log_weights_ref
-from repro.kernels.kde_density import kde_log_density, kde_log_density_ref
+from repro.kernels.kde_density import (
+    kde_log_density,
+    kde_log_density_ref,
+    machine_kde_log_density,
+)
 from repro.kernels.logreg_loglik import logreg_loglik_grad, logreg_loglik_grad_ref
 
 
@@ -48,6 +53,24 @@ def run(full: bool = False) -> List[Row]:
     t_r = timed(lambda: block(kde_log_density_ref(q, s, 0.5)))
     rows.append(Row("kernels", "kde_1024x4096x50", "kernel_us", t_k * 1e6, "us", "interpret"))
     rows.append(Row("kernels", "kde_1024x4096x50", "ref_us", t_r * 1e6, "us"))
+
+    # batched all-machines KDE scoring (PR 8 engine) — production routing:
+    # Pallas kernel on real TPU, chunked jnp ref on CPU/interpret. The extra
+    # records which path ran so interpret-mode CPU numbers are never read as
+    # TPU kernel regressions.
+    interp = default_interpret()
+    route = f"interpret={interp} impl={'ref' if interp else 'kernel'}"
+    Mk, Tk = 8, 4096
+    mq = jax.random.normal(jax.random.fold_in(key, 4), (1024, 50))
+    ms = jax.random.normal(jax.random.fold_in(key, 5), (Mk, Tk, 50))
+    mh = jnp.full((Mk,), 0.5)
+    t_full = timed(lambda: block(machine_kde_log_density(mq, ms, mh)))
+    t_fused = timed(lambda: block(machine_kde_log_density(
+        mq, ms, mh, reduce="product_mixture", mixture_weights="uniform")))
+    rows.append(Row("kernels", "machine_kde_1024x8x4096", "op_us",
+                    t_full * 1e6, "us", route))
+    rows.append(Row("kernels", "machine_kde_1024x8x4096", "fused_us",
+                    t_fused * 1e6, "us", route + " reduce=product_mixture"))
 
     # ---- §4 complexity: combine cost vs M (incremental = O(dTM)) ----------
     T, d = 400, 10

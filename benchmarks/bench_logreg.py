@@ -90,8 +90,16 @@ def run(full: bool = False) -> List[Row]:
     for name in canonical_combiners():
         fn = get_combiner(name)
         t0 = time.perf_counter()
+        # samples enter as a traced argument — the production calling
+        # convention (Pipeline/combine_gathered pass the gathered chains as
+        # runtime data). Closing over them instead bakes the (M, T, d) cloud
+        # into the program as a constant and XLA constant-folds whole
+        # reductions of it at compile time, which both inflates compile cost
+        # and measures a program no production path ever runs.
         samples = block(
-            jax.jit(lambda k, f=fn: f(k, sub, T, rescale=True).samples)(jax.random.PRNGKey(2))
+            jax.jit(lambda k, s, f=fn: f(k, s, T, rescale=True).samples)(
+                jax.random.PRNGKey(2), sub
+            )
         )
         t_comb = time.perf_counter() - t0
         err = float(metrics.log_l2_distance(gt, samples))

@@ -68,8 +68,16 @@ def run(full: bool = False) -> List[Row]:
                     t, "s",
                     f"T={T} warmup={WARMUP} n={N} acc={float(acc.mean()):.2f}")
             )
+            # gibbs throughput history: the PR-8 Marsaglia–Tsang conditionals
+            # (repro.samplers.randgamma) replaced jax.random.gamma's Newton
+            # inversion — before: 33.6 draws/s (M=4) / 160.9 (M=10) at T=200
+            # (BENCH_20260808_021223); after: O(10³–10⁴) draws/s.
+            extra = (
+                "randgamma conditionals; pre-randgamma 33.6 draws/s @ M=4"
+                if name == "gibbs" else ""
+            )
             rows.append(
                 Row("samplers", f"{name}_M={M}", "draws_per_second",
-                    M * T / t, "draws/s")
+                    M * T / t, "draws/s", extra)
             )
     return rows

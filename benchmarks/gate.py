@@ -24,6 +24,14 @@ Design notes:
 - CI boxes are noisy: rows faster than ``--min-seconds`` (default 30 ms)
   are reported but never fail the gate; their jitter is scheduler noise,
   not a code regression.
+- Fast rows above the floor are still jitter-prone in *absolute* terms — a
+  75 ms baseline can flake past +25 % on pure scheduler noise. A failure
+  therefore also requires the row to regress by more than ``--abs-slack``
+  (default 75 ms) in absolute seconds, so a sub-100 ms row must lose both
+  >25 % *and* >75 ms before it fails. Big wins (e.g. a combiner dropping
+  from 12 s to 3 s) shrink their own baselines over the rolling window;
+  the absolute slack keeps the gate meaningful at the new fast scale
+  without re-tuning the relative threshold.
 """
 
 from __future__ import annotations
@@ -71,12 +79,15 @@ def evaluate(
     *,
     threshold: float = 0.25,
     min_seconds: float = 0.03,
+    abs_slack: float = 0.075,
 ) -> List[Verdict]:
     """Gate ``candidate`` against ``history`` (older snapshots, any order).
 
-    A row fails iff it has a baseline, its value exceeds
-    ``baseline * (1 + threshold)``, and the baseline is at least
-    ``min_seconds`` (sub-noise-floor rows never fail).
+    A row fails iff it has a baseline, the baseline is at least
+    ``min_seconds`` (sub-noise-floor rows never fail), and the value exceeds
+    **both** ``baseline * (1 + threshold)`` and ``baseline + abs_slack`` —
+    the absolute slack keeps sub-100 ms rows from flaking on scheduler
+    jitter that easily clears a purely relative bar.
     """
     verdicts: List[Verdict] = []
     for key, value in sorted(gated_rows(candidate).items()):
@@ -86,6 +97,7 @@ def evaluate(
             base is not None
             and base >= min_seconds
             and value > base * (1.0 + threshold)
+            and value > base + abs_slack
         )
         verdicts.append(Verdict(key, value, base, ratio, failed))
     return verdicts
@@ -114,6 +126,9 @@ def main(argv=None) -> int:
                     help="baseline = median of this many prior snapshots")
     ap.add_argument("--min-seconds", type=float, default=0.03,
                     help="rows with baselines below this never fail (noise floor)")
+    ap.add_argument("--abs-slack", type=float, default=0.075,
+                    help="a failing row must also regress by more than this "
+                    "many absolute seconds (sub-100 ms jitter guard)")
     args = ap.parse_args(argv)
 
     snapshots = load_snapshots(args.perf_dir)
@@ -131,7 +146,8 @@ def main(argv=None) -> int:
 
     history = history[-args.last:]
     verdicts = evaluate(
-        candidate, history, threshold=args.threshold, min_seconds=args.min_seconds
+        candidate, history, threshold=args.threshold,
+        min_seconds=args.min_seconds, abs_slack=args.abs_slack,
     )
 
     print(f"gate: {cand_path} vs median of last {len(history)} snapshot(s), "

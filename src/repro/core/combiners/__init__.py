@@ -133,6 +133,7 @@ from repro.core.combiners.img import (  # noqa: F401
 )
 from repro.core.combiners.density import (  # noqa: F401
     machine_kde_logpdfs,
+    machine_kde_scores,
     masked_silverman,
 )
 from repro.core.combiners.importance_pool import importance_pool  # noqa: F401

@@ -2,15 +2,19 @@
 
 The Weierstrass refinement sampler and importance-weighted pooling both need
 ``log p̂_m(θ)`` — each machine's Gaussian-KDE log density — evaluated at many
-query points. Two execution paths behind one helper:
+query points. Since the batched scoring engine landed this is ONE code path
+for dense and ragged chains: :func:`repro.kernels.kde_density.
+machine_kde_log_density` scores all machines in a single launch (one Pallas
+program on TPU — grid over (query-tile, machine, center-tile), flash-style
+tiled logsumexp, per-machine bandwidth and valid-prefix ``counts`` applied
+inside the kernel; the vectorized chunked jnp ref elsewhere). Callers that
+only need the pooled product score Σ_m log p̂_m or a mixture proposal score
+should use :func:`machine_kde_scores`, whose fused reductions never
+materialize the (M, Q) matrix on the kernel path.
 
-- ``counts is None`` (dense chains): one call per machine to the Pallas
-  :func:`repro.kernels.kde_density.kde_log_density` streaming kernel — the
-  TPU hot path (flash-style tiled logsumexp, no (Q, T) matrix in HBM).
-- ragged ``counts``: a chunked masked-logsumexp jnp path, because the valid
-  prefix of each chain is data-dependent and the kernel scores all centers.
-  This is also the path the pairwise tree reduction takes (it always carries
-  per-pair counts), which keeps the whole combiner vmap-able over pairs.
+The pairwise tree reduction reuses the same helpers (it always carries
+per-pair counts), which keeps the whole combiner vmap-able over pairs — the
+ref path is pure jnp and vmaps transparently.
 
 Bandwidths come from :func:`masked_silverman` — Silverman's rule per machine
 over the valid prefix only, so straggler chains don't drag garbage rows into
@@ -19,16 +23,9 @@ the scale estimate.
 
 from __future__ import annotations
 
-import math
+from typing import Optional, Tuple, Union
 
-from typing import Optional
-
-import jax
 import jax.numpy as jnp
-
-# host-side, not jnp.log(...): module import must not run a JAX
-# computation (jax.distributed.initialize refuses to start after one)
-_LOG2PI = math.log(2.0 * math.pi)
 
 
 def masked_silverman(samples: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
@@ -57,7 +54,7 @@ def masked_silverman(samples: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
 def machine_kde_logpdfs(
     queries: jnp.ndarray,  # (Q, d)
     samples: jnp.ndarray,  # (M, T, d)
-    counts: Optional[jnp.ndarray],  # None ⇒ dense (Pallas kernel path)
+    counts: Optional[jnp.ndarray],  # None ⇒ every chain dense (all T rows)
     h: jnp.ndarray,  # (M,) per-machine bandwidths
     *,
     chunk: int = 256,
@@ -66,36 +63,31 @@ def machine_kde_logpdfs(
 
     ``Σ over axis 0`` of the result is the pooled product score Σ_m log p̂_m;
     a counts-weighted logsumexp over axis 0 is the pooled-mixture proposal
-    density — the two quantities the reweighting combiners build on.
+    density — but callers needing only those reductions should go through
+    :func:`machine_kde_scores` to keep (M, Q) off the hot path.
     """
-    M, T, d = samples.shape
-    if counts is None:
-        from repro.kernels.kde_density import kde_log_density
+    from repro.kernels.kde_density import machine_kde_log_density
 
-        return jnp.stack(
-            [kde_log_density(queries, samples[m], h[m]) for m in range(M)]
-        )
+    return machine_kde_log_density(queries, samples, h, counts, chunk=chunk)
 
-    mask = jnp.arange(T)[None, :] < counts[:, None]  # (M, T) bool
-    csq = jnp.sum(samples**2, axis=-1)  # (M, T)
-    Q = queries.shape[0]
-    pad = (-Q) % chunk
-    qp = jnp.pad(queries, ((0, pad), (0, 0))).reshape(-1, chunk, d)
 
-    def block(qc):  # (chunk, d) → (M, chunk)
-        sq = (
-            jnp.sum(qc**2, axis=-1)[None, :, None]
-            + csq[:, None, :]
-            - 2.0 * jnp.einsum("qd,mtd->mqt", qc, samples)
-        )
-        logk = -0.5 * sq / (h[:, None, None] ** 2)
-        logk = jnp.where(mask[:, None, :], logk, -jnp.inf)
-        return jax.scipy.special.logsumexp(logk, axis=-1)
+def machine_kde_scores(
+    queries: jnp.ndarray,  # (Q, d)
+    samples: jnp.ndarray,  # (M, T, d)
+    counts: Optional[jnp.ndarray],
+    h: jnp.ndarray,  # (M,)
+    *,
+    reduce: str,
+    mixture_weights: str = "uniform",
+    chunk: int = 256,
+) -> Union[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Fused pooled scores: ``reduce`` ∈ {"product", "mixture",
+    "product_mixture"} → (Q,) (or a pair of them), computed without ever
+    materializing the (M, Q) log-density matrix on the kernel path.
+    """
+    from repro.kernels.kde_density import machine_kde_log_density
 
-    out = jax.lax.map(block, qp)  # (n_chunks, M, chunk)
-    lse = jnp.moveaxis(out, 0, 1).reshape(M, -1)[:, :Q]  # (M, Q)
-    log_norm = (
-        -jnp.log(jnp.maximum(counts.astype(queries.dtype), 1.0))
-        - 0.5 * d * (2.0 * jnp.log(h) + _LOG2PI)
+    return machine_kde_log_density(
+        queries, samples, h, counts,
+        reduce=reduce, mixture_weights=mixture_weights, chunk=chunk,
     )
-    return lse + log_norm[:, None]

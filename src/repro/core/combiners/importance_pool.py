@@ -11,11 +11,11 @@ but corrects the distribution by self-normalized importance sampling:
                                              contribute exactly T rows)
     log w_i   =  Σ_m log p̂_m(θ_i) − log q(θ_i)
 
-evaluated on every pooled point θ_i with the registry's uniform
-counts-masked KDE API (:mod:`repro.core.combiners.density` — the Pallas
-``kde_density`` kernel on the dense path, masked-logsumexp jnp under ragged
-``counts``). Note q reuses the same M per-machine evaluations the target
-needs, so the proposal density is free.
+evaluated on every pooled point θ_i with the registry's counts-masked KDE
+API (:mod:`repro.core.combiners.density` — the batched all-machines
+``machine_kde_log_density`` op). Target and proposal are one fused
+``product_mixture`` evaluation: the kernel path computes both (N,) scores in
+a single launch without materializing the (M, N) log-density matrix.
 
 Self-normalized resampling then emits exactly ``n_draws`` rows. Two
 standard IS safeguards, both optional:
@@ -47,7 +47,7 @@ from repro.core.combiners.api import (
     ragged_gather,
     register,
 )
-from repro.core.combiners.density import machine_kde_logpdfs, masked_silverman
+from repro.core.combiners.density import machine_kde_scores, masked_silverman
 
 
 @register("importance_pool", "importance_weighted_pool")
@@ -81,14 +81,15 @@ def importance_pool(
     else:
         h = jnp.full((M,), bandwidth, dtype)
 
-    logp = machine_kde_logpdfs(
-        pooled, samples, counts if counts is None else counts_arr, h
-    )  # (M, N)
-    target = jnp.sum(logp, axis=0)
     # ragged chains are wrap-densified, so every machine contributes exactly
     # T pooled rows — the pooled cloud's law is the *uniform* mixture of the
-    # per-machine KDEs regardless of counts.
-    log_q = jax.scipy.special.logsumexp(logp, axis=0) - jnp.log(float(M))
+    # per-machine KDEs regardless of counts. Both pooled scores come from one
+    # fused batched-KDE evaluation; the (M, N) matrix never materializes on
+    # the kernel path.
+    target, log_q = machine_kde_scores(
+        pooled, samples, counts if counts is None else counts_arr, h,
+        reduce="product_mixture", mixture_weights="uniform",
+    )
     log_w = (target - log_q) * jnp.asarray(temper, jnp.float32)
 
     if truncate:

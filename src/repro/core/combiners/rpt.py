@@ -122,28 +122,33 @@ def rpt(
         pts = pooled[perm]
         ids = machine[perm]
 
-        cut_dims = []
-        for lvl in range(L):
-            n_nodes = 2**lvl
+        # the median-cut recursion is a scan over levels, not an unrolled
+        # Python loop: every level has the same static point shapes, node
+        # statistics come from segment reductions, and the per-node stable
+        # argsort is one lexsort keyed (cut coordinate, node id) — identical
+        # ordering (both sorts are stable), one compiled level body instead
+        # of L gather programs.
+        def level(carry, lvl):
+            pts, ids = carry
+            n_nodes = jnp.left_shift(1, lvl)  # traced 2^lvl
             seg = n_keep // n_nodes
-            p = pts.reshape(n_nodes, seg, d)
+            seg_id = jnp.arange(n_keep) // seg  # point → node, (n_keep,)
+            seg_f = seg.astype(pts.dtype)
             # one cut dim per LEVEL (mean within-node variance, Gumbel-
             # perturbed) so every leaf shares the same cut-dim multiset —
             # see the module docstring's volume-cancellation argument
-            var = jnp.mean(jnp.var(p, axis=1), axis=0)  # (d,)
+            node_mean = (
+                jax.ops.segment_sum(pts, seg_id, num_segments=n_leaf) / seg_f
+            )  # (n_leaf, d); rows ≥ n_nodes stay zero and drop out below
+            dev = (pts - node_mean[seg_id]) ** 2
+            node_var = jax.ops.segment_sum(dev, seg_id, num_segments=n_leaf) / seg_f
+            var = jnp.sum(node_var, axis=0) / n_nodes.astype(pts.dtype)  # (d,)
             gum = jax.random.gumbel(jax.random.fold_in(k_dim, lvl), var.shape)
             cut = jnp.argmax(jnp.log(var + 1e-20) + gum)  # () traced dim index
-            cut_dims.append(cut)
-            keys_ = jnp.take_along_axis(
-                p, jnp.broadcast_to(cut, (n_nodes,))[:, None, None], axis=-1
-            )[..., 0]  # (n_nodes, seg)
-            order = jnp.argsort(keys_, axis=1)
-            pts = jnp.take_along_axis(p, order[:, :, None], axis=1).reshape(n_keep, d)
-            ids = jnp.take_along_axis(
-                ids.reshape(n_nodes, seg), order, axis=1
-            ).reshape(n_keep)
+            order = jnp.lexsort((jnp.take(pts, cut, axis=1), seg_id))
+            return (pts[order], ids[order]), cut
 
-        cut_dims = jnp.stack(cut_dims)  # (L,)
+        (pts, ids), cut_dims = jax.lax.scan(level, (pts, ids), jnp.arange(L))
         leaves = pts.reshape(n_leaf, S, d)
         leaf_ids = ids.reshape(n_leaf, S)
 

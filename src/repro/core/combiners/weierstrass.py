@@ -27,7 +27,8 @@ Initialization: the default start is a uniform pooled draw — the analog of
 Algorithm 1's uniform index init, whose wide early-anneal transient is part
 of the emitted trajectory by convention. ``init_pool > 0`` switches to a
 density-guided start: it scores a strided subsample of the pooled cloud
-under Σ_m log p̂_m via the Pallas ``kde_density`` kernel (dense path) and
+under Σ_m log p̂_m via the batched ``machine_kde_log_density`` op (fused
+product epilogue — one launch, no (M, pool) matrix on the kernel path) and
 draws each chain's θ₀ from the softmax of those scores — chains start in
 the product's high-density region, cutting the transient (useful when the
 combined draws feed a downstream consumer rather than a KDE metric). The
@@ -61,7 +62,7 @@ from repro.core.combiners.api import (
     register,
     resolve_schedule,
 )
-from repro.core.combiners.density import machine_kde_logpdfs, masked_silverman
+from repro.core.combiners.density import machine_kde_scores, masked_silverman
 
 
 @register("weierstrass", "weierstrass_refine")
@@ -97,11 +98,11 @@ def weierstrass(
         h0 = masked_silverman(samples, counts_arr)  # (M,)
         stride = max(1, (M * T) // min(int(init_pool), M * T))
         cand = pooled[::stride]
-        # Σ_m log p̂_m over the candidate pool — Pallas kde_density on the
-        # dense path, counts-masked jnp otherwise.
-        score = jnp.sum(
-            machine_kde_logpdfs(cand, samples, counts if counts is None else counts_arr, h0),
-            axis=0,
+        # Σ_m log p̂_m over the candidate pool — one fused batched-KDE launch,
+        # product epilogue (no (M, pool) matrix).
+        score = machine_kde_scores(
+            cand, samples, counts if counts is None else counts_arr, h0,
+            reduce="product",
         )
         idx0 = jax.random.categorical(k_init, score, shape=(n_batch,))
         theta0 = cand[idx0]  # (B, d)

@@ -67,6 +67,174 @@ def _kde_kernel(q_ref, s_ref, mask_ref, h_ref, out_ref, m_ref, l_ref, *, n_sbloc
         out_ref[...] = m_ref[...] + jnp.log(l_ref[...]) - log_norm
 
 
+# ---------------------------------------------------------------------------
+# batched all-machines variant: one launch scores every machine's KDE
+# ---------------------------------------------------------------------------
+
+
+def _machine_kde_kernel(
+    h_ref,  # scalar-prefetch: (M,) per-machine bandwidth
+    c_ref,  # scalar-prefetch: (M,) int32 valid-prefix counts
+    w_ref,  # scalar-prefetch: (M,) log mixture weights (mixture epilogues)
+    q_ref,  # (block_q, d) query tile
+    s_ref,  # (1, block_s, d) center tile of machine m
+    *refs,  # out refs (by `reduce`), then scratch: m, l, acc, mx_m, mx_l
+    n_sblocks: int,
+    n_machines: int,
+    block_s: int,
+    d: int,
+    reduce: str,
+):
+    outs, (m_scr, l_scr, acc_scr, mxm_scr, mxl_scr) = refs[:-5], refs[-5:]
+    m = pl.program_id(1)
+    j = pl.program_id(2)
+    first_machine = m == 0
+    last_machine = m == n_machines - 1
+
+    @pl.when(j == 0)
+    def _init_machine():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_BIG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    @pl.when(jnp.logical_and(first_machine, j == 0))
+    def _init_epilogue():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        mxm_scr[...] = jnp.full_like(mxm_scr, _NEG_BIG)
+        mxl_scr[...] = jnp.zeros_like(mxl_scr)
+
+    q = q_ref[...].astype(jnp.float32)  # (block_q, d)
+    s = s_ref[0].astype(jnp.float32)  # (block_s, d)
+    h = h_ref[m]
+    cnt = c_ref[m]
+
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)  # (block_q, 1)
+    sn = jnp.sum(s * s, axis=-1)[None, :]  # (1, block_s)
+    cross = jax.lax.dot_general(
+        q, s, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (block_q, block_s)
+    scores = -(qn + sn - 2.0 * cross) * (0.5 / (h * h))
+
+    # valid-prefix mask lives IN the kernel: center column t of tile j is row
+    # j·block_s + t of machine m's chain. A where-select (not an additive
+    # mask) so NaN garbage beyond counts[m] can never poison max/exp.
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1) + j * block_s
+    valid = col < cnt  # (1, block_s)
+    scores = jnp.where(valid, scores, _NEG_BIG)
+
+    m_new = jnp.maximum(m_scr[...], jnp.max(scores, axis=-1))
+    p = jnp.where(valid, jnp.exp(scores - m_new[:, None]), 0.0)
+    l_scr[...] = l_scr[...] * jnp.exp(m_scr[...] - m_new) + jnp.sum(p, axis=-1)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_sblocks - 1)
+    def _finalize_machine():
+        cntf = jnp.maximum(cnt.astype(jnp.float32), 1.0)
+        log_norm = jnp.log(cntf) + 0.5 * d * jnp.log(2.0 * jnp.pi * h * h)
+        lpm = m_scr[...] + jnp.log(l_scr[...]) - log_norm  # (block_q,); -inf if empty
+
+        if reduce == "none":
+            outs[0][0, :] = lpm
+            return
+
+        k = 0
+        if reduce in ("product", "product_mixture"):
+            acc_scr[...] = acc_scr[...] + lpm  # Σ_m log p̂_m; -inf propagates
+
+            @pl.when(last_machine)
+            def _():
+                outs[0][...] = acc_scr[...]
+
+            k = 1
+        if reduce in ("mixture", "product_mixture"):
+            # online logsumexp across machines of log w_m + log p̂_m; empty
+            # machines enter as the -1e30 sentinel and contribute exp→0.
+            lw = jnp.maximum(lpm + w_ref[m], _NEG_BIG)
+            mx_new = jnp.maximum(mxm_scr[...], lw)
+            pm = jnp.where(lw > 0.1 * _NEG_BIG, jnp.exp(lw - mx_new), 0.0)
+            mxl_scr[...] = mxl_scr[...] * jnp.exp(mxm_scr[...] - mx_new) + pm
+            mxm_scr[...] = mx_new
+
+            @pl.when(last_machine)
+            def _():
+                outs[k][...] = mxm_scr[...] + jnp.log(mxl_scr[...])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_s", "interpret", "reduce"),
+)
+def machine_kde_log_density_kernel(
+    queries: jnp.ndarray,  # (nq, d) padded: nq % block_q == 0
+    samples: jnp.ndarray,  # (M, T, d) padded: T % block_s == 0
+    h: jnp.ndarray,  # (M,) float32 per-machine bandwidth
+    counts: jnp.ndarray,  # (M,) int32 valid-prefix counts (≤ unpadded T)
+    log_mix_w: jnp.ndarray,  # (M,) float32 log mixture weights
+    *,
+    reduce: str = "none",
+    block_q: int = 256,
+    block_s: int = 512,
+    interpret: bool = False,
+):
+    """All-machines KDE scoring in ONE launch: grid (q-tile, machine, s-tile).
+
+    Flash-style online logsumexp per (query-tile, machine) in VMEM scratch —
+    the (M, nq, T) score tensor never exists. ``reduce`` selects the fused
+    epilogue: ``"none"`` → (M, nq) per-machine log densities; ``"product"`` →
+    (nq,) pooled product score Σ_m log p̂_m; ``"mixture"`` → (nq,) mixture
+    score logsumexp_m(log w_m + log p̂_m); ``"product_mixture"`` → both, with
+    the (M, nq) matrix never materialized in any reduced mode. Per-machine
+    bandwidth and valid-prefix ``counts`` ride the scalar-prefetch operand and
+    are applied inside the kernel, so dense and ragged chains take the same
+    code path (a machine's rows beyond ``counts[m]`` may hold NaN garbage —
+    they are where-selected out before any max/exp).
+    """
+    nq, d = queries.shape
+    M, T, _ = samples.shape
+    n_q, n_s = nq // block_q, T // block_s
+    if reduce == "none":
+        out_shape = [jax.ShapeDtypeStruct((M, nq), jnp.float32)]
+        out_specs = [pl.BlockSpec((1, block_q), lambda i, m, j, *_: (m, i))]
+    elif reduce in ("product", "mixture"):
+        out_shape = [jax.ShapeDtypeStruct((nq,), jnp.float32)]
+        out_specs = [pl.BlockSpec((block_q,), lambda i, m, j, *_: (i,))]
+    elif reduce == "product_mixture":
+        out_shape = [jax.ShapeDtypeStruct((nq,), jnp.float32)] * 2
+        out_specs = [pl.BlockSpec((block_q,), lambda i, m, j, *_: (i,))] * 2
+    else:
+        raise ValueError(f"unknown reduce={reduce!r}")
+
+    kernel = functools.partial(
+        _machine_kde_kernel,
+        n_sblocks=n_s, n_machines=M, block_s=block_s, d=d, reduce=reduce,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_q, M, n_s),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, m, j, *_: (i, 0)),
+            pl.BlockSpec((1, block_s, d), lambda i, m, j, *_: (m, j, 0)),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=[pltpu.VMEM((block_q,), jnp.float32) for _ in range(5)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=_COMPILER_PARAMS_CLS(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        h.astype(jnp.float32),
+        counts.astype(jnp.int32),
+        log_mix_w.astype(jnp.float32),
+        queries,
+        samples,
+    )
+    return out[0] if len(out) == 1 else tuple(out)
+
+
 @functools.partial(jax.jit, static_argnames=("block_q", "block_s", "interpret", "ns_actual"))
 def kde_log_density_kernel(
     queries: jnp.ndarray,  # (nq, d) padded: nq % block_q == 0

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.scipy.special import gammaln
 
 from repro.models.bayes import registry
+from repro.samplers import randgamma
 
 Data = Dict[str, jnp.ndarray]
 
@@ -103,8 +104,11 @@ def gibbs_blocks(data: Data, num_shards: int, mh_step: float = 0.15, count=None)
 
     def update_q(key, pos):
         a, b = jnp.exp(pos["theta"][0]), jnp.exp(pos["theta"][1])
-        # q_i | a,b,x ~ Gamma(a + x_i, rate b + t_i)
-        q = jax.random.gamma(key, a + x, (n,)) / (b + t)
+        # q_i | a,b,x ~ Gamma(a + x_i, rate b + t_i). Marsaglia–Tsang
+        # rejection, not jax.random.gamma: this n-vector of gamma draws per
+        # sweep is the whole-sampler bottleneck, and the conditional never
+        # needs d/dα (see repro.samplers.randgamma).
+        q = randgamma.gamma(key, a + x, (n,)) / (b + t)
         return {**pos, "q": q}
 
     def update_b(key, pos):
@@ -115,7 +119,7 @@ def gibbs_blocks(data: Data, num_shards: int, mh_step: float = 0.15, count=None)
         rate = BETA * inv_m + (
             jnp.sum(pos["q"]) if w is None else jnp.sum(w * pos["q"])
         )
-        b = jax.random.gamma(key, shape) / rate
+        b = randgamma.gamma(key, shape) / rate
         theta = pos["theta"].at[1].set(jnp.log(b))
         return {**pos, "theta": theta}
 

@@ -73,6 +73,40 @@ def test_noise_floor_rows_never_fail():
     assert not verdicts[0].failed  # 10x slower but under the noise floor
 
 
+def test_fast_row_within_abs_slack_never_fails():
+    # 60 ms → 100 ms is +67% relative but only 40 ms absolute: scheduler
+    # jitter on a sub-100 ms row, not a regression.
+    history = [_snap(f"t{i}", t_fast=0.06) for i in range(3)]
+    verdicts = gate.evaluate(_snap("t9", t_fast=0.10), history, abs_slack=0.075)
+    assert not verdicts[0].failed
+
+
+def test_fast_row_beyond_abs_slack_fails():
+    # 60 ms → 200 ms clears both the relative threshold and the 75 ms slack.
+    history = [_snap(f"t{i}", t_fast=0.06) for i in range(3)]
+    verdicts = gate.evaluate(_snap("t9", t_fast=0.20), history, abs_slack=0.075)
+    assert verdicts[0].failed
+
+
+def test_abs_slack_does_not_shield_slow_rows():
+    # on a 10 s row the slack is negligible: the relative threshold decides.
+    history = [_snap(f"t{i}", t_slow=10.0) for i in range(3)]
+    verdicts = gate.evaluate(_snap("t9", t_slow=13.0), history, abs_slack=0.075)
+    assert verdicts[0].failed
+
+
+def test_cli_abs_slack_flag(tmp_path):
+    for i in range(3):
+        (tmp_path / f"BENCH_2026010{i}_000000.json").write_text(
+            json.dumps(_snap(f"t{i}", t_fast=0.06))
+        )
+    (tmp_path / "BENCH_20260109_000000.json").write_text(
+        json.dumps(_snap("t9", t_fast=0.10))
+    )
+    assert gate.main(["--perf-dir", str(tmp_path)]) == 0  # default 75 ms slack
+    assert gate.main(["--perf-dir", str(tmp_path), "--abs-slack", "0.0"]) == 1
+
+
 def test_cli_end_to_end(tmp_path, capsys):
     for i, v in enumerate((0.5, 0.52, 0.48)):
         (tmp_path / f"BENCH_2026010{i}_000000.json").write_text(
