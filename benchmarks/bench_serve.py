@@ -1,0 +1,110 @@
+"""Posterior-as-a-service: reader latency + sampler throughput under load.
+
+The serving loop's contract (ISSUE 9) is that concurrent readers answer
+from the freshest snapshot **without stalling the sampler**: chunks are
+never dropped, estimate refreshes coalesce under backpressure, and the only
+way serving slows sampling is the bounded chunk queue. This bench measures
+both sides of that contract on the quick linear/MALA configuration:
+
+- ``sample_unserved``: wall time of the sampling stage driven by a bare
+  ``PosteriorServer`` with **zero** readers (the serving-loop baseline —
+  same queue, folder, and refresh machinery, nobody asking questions);
+- ``sample_served``: the same run with 32 concurrent TCP probe readers,
+  each paced to a steady 10 requests/s offered load, cycling the snapshot
+  query types (mean/cov, quantiles, draws, status) for the whole duration
+  of sampling. Two deliberate choices keep this an honest *serving
+  overhead* figure rather than a probe-compute figure: ``logpdf`` is
+  excluded from the probe mix (it is a heavy analysis op — batched
+  machine-KDE scoring over the whole accumulated draw buffer, re-jitted
+  per buffer shape — covered functionally by the CI serve smoke and
+  ``tests/test_serve.py``), and the readers are **paced** rather than
+  closed-loop: an unpaced pool on a small CPU rig just measures its own
+  python busy-loop stealing the sampler's core;
+- ``reader_p50`` / ``reader_p99``: per-query latency percentiles observed
+  by those readers mid-stream;
+- ``throughput_ratio``: ``sample_unserved / sample_served`` — the
+  acceptance criterion tracks ≥ 0.95 (≤ 5% sampler throughput loss under
+  32 readers). Ratio rows ("x" units) are diagnostic: the perf gate
+  (``benchmarks.gate``) gates the wall-clock rows, CI smoke asserts the
+  serving contract itself.
+
+Both runs are warmed once (fresh Pipelines hitting the jit cache) so the
+figures compare serving dataflow, not XLA compile time. Readers run in the
+same process — on a GIL'd CPU rig the probe pool costs some sampler time of
+its own, which makes the ratio a *conservative* bound on the server-side
+overhead a remote reader pool would impose.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.api import Pipeline, RunSpec
+from repro.serve import serve_pipeline
+
+T_QUICK, T_FULL = 1200, 4000
+READERS = 32
+PROBE_HZ = 10.0  # steady offered load per reader
+COMBINER = "parametric"
+
+
+def _spec(T: int) -> RunSpec:
+    return RunSpec(
+        model="linear",
+        sampler="mala",
+        combiner=(COMBINER,),
+        M=4,
+        T=T,
+        warmup=50,
+        n=4096,
+        seed=0,
+        groundtruth_T=100,  # unused (no scoring stage) but part of the spec
+        score_metric="logl2",
+        stream_every=max(T // 12, 1),
+    )
+
+
+def _serve_run(T: int, readers: int) -> dict:
+    pipe = Pipeline(_spec(T), check_hlo=False)
+    return serve_pipeline(
+        pipe, probe_readers=readers, probe_logpdf=False,
+        probe_interval_s=1.0 / PROBE_HZ, log=lambda *_: None,
+    )
+
+
+def run(full: bool = False) -> List[Row]:
+    T = T_FULL if full else T_QUICK
+    _serve_run(T, readers=0)  # warm the sampling + estimate programs
+
+    quiet = _serve_run(T, readers=0)
+    served = _serve_run(T, readers=READERS)
+
+    st = served["staleness"]
+    assert st["complete"], "served run did not complete"
+    assert st["chunks_folded"] == T // _spec(T).stream_every, (
+        "serving dropped chunks"  # the never-drop-chunks contract
+    )
+    assert served["queries"] > 0 and not served["probe_errors"]
+
+    extra = (
+        f"model=linear M=4 T={T} stream_every={_spec(T).stream_every} "
+        f"combiner={COMBINER}"
+    )
+    ratio = quiet["sample_s"] / max(served["sample_s"], 1e-9)
+    return [
+        Row("serve", "readers=0", "sample_unserved",
+            quiet["sample_s"], "s", extra),
+        Row("serve", f"readers={READERS}", "sample_served",
+            served["sample_s"], "s",
+            f"{served['queries']} queries answered at {PROBE_HZ:g} Hz/reader, "
+            f"{st['refreshes_dropped']} refreshes coalesced"),
+        Row("serve", f"readers={READERS}", "reader_p50",
+            served["reader_p50_s"], "s", extra),
+        Row("serve", f"readers={READERS}", "reader_p99",
+            served["reader_p99_s"], "s", extra),
+        Row("serve", f"readers={READERS}", "throughput_ratio",
+            ratio, "x",
+            "unserved/served sampler wall time (acceptance tracks >= 0.95; "
+            "in-process GIL'd probe pool makes this a conservative bound)"),
+    ]

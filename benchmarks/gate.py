@@ -3,9 +3,9 @@
 The repo accumulates one benchmark snapshot per PR (``benchmarks.run
 --json perf/``). This gate keeps the streaming/combination hot path honest:
 it compares the newest snapshot's wall-time rows for the ``stream``,
-``combine``, and ``matrix`` benches against the **median of the previous
-three** snapshots (per ``(bench, case, metric)``) and fails when any row
-regressed by more than 25 %.
+``combine``, ``matrix``, and ``serve`` benches against the **median of the
+previous three** snapshots (per ``(bench, case, metric)``) and fails when
+any row regressed by more than 25 %.
 
   PYTHONPATH=src python -m benchmarks.gate                 # gate newest vs history
   PYTHONPATH=src python -m benchmarks.gate --candidate p.json
@@ -44,7 +44,7 @@ import sys
 from statistics import median
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
-GATED_BENCHES = ("stream", "combine", "matrix")
+GATED_BENCHES = ("stream", "combine", "matrix", "serve")
 GATED_UNITS = "s"
 
 RowKey = Tuple[str, str, str]  # (bench, case, metric)

@@ -34,6 +34,7 @@ BENCHES = [
     # "stream", not "stream_combine": --only combine must keep selecting the
     # combine bench alone (substring filter)
     ("stream", "benchmarks.bench_stream"),
+    ("serve", "benchmarks.bench_serve"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.bench_roofline"),
 ]

@@ -44,6 +44,7 @@ from repro.api.pipeline import (  # noqa: F401
     Scoreboard,
     ShardedData,
     StreamResult,
+    StreamSetup,
     SubposteriorDraws,
     combine_draws,
 )
@@ -97,6 +98,7 @@ __all__ = [
     "ShardedData",
     "StreamChunk",
     "StreamResult",
+    "StreamSetup",
     "StreamedSample",
     "SubposteriorDraws",
     "combine_draws",

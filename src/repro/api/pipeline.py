@@ -59,6 +59,7 @@ from repro.core.subposterior import partition_data
 from repro.core.combiners import (
     BufferState,
     CombineResult,
+    StreamingCombiner,
     filter_options,
     get_combiner,
     get_scan_face,
@@ -161,12 +162,15 @@ class StreamResult(NamedTuple):
     one per (chunk boundary, combiner-with-a-cheap-``estimate``), in
     landing order (fallback-streamed combiners fold every chunk but only
     finalize, so they contribute no rows); ``elapsed_s`` is
-    wall time since the stream started (``trajectory[0]["elapsed_s"]`` is
-    the time-to-first-estimate the bench tracks; on a resumed run the
-    replayed prefix carries the resume session's clock; on the fused path
-    every row carries the same post-run stamp — estimates materialize
-    together when the one compiled program returns, so there is no
-    meaningful per-row clock). ``combined`` holds
+    wall time since the stream started, stamped per row when that row's
+    estimate has actually materialized (``block_until_ready`` before the
+    clock read) — so it is monotone in landing order and honest in both
+    modes (``trajectory[0]["elapsed_s"]`` is the time-to-first-estimate the
+    bench tracks; on a resumed run the replayed prefix carries the resume
+    session's clock; on the fused path the one compiled combine-fold
+    program materializes estimates close together, so consecutive stamps
+    can be near-identical — but each is still that row's true availability
+    instant). ``combined`` holds
     the finalized per-combiner results (empty while ``complete`` is False).
     """
 
@@ -178,6 +182,23 @@ class StreamResult(NamedTuple):
     metric: str  # "L2" | "logL2" | "" when unscored
     stream_every: int
     n_estimate: int
+
+
+class StreamSetup(NamedTuple):
+    """Resolved combine-while-sampling surfaces for one stream consumer.
+
+    The shared setup of everything that folds the chunk stream —
+    :meth:`Pipeline.stream_combine` and the ``repro.serve`` query layer —
+    so both consume identical streaming combiners, per-name RNG streams
+    (``fold_in(key, 3)`` + stable name hash, the combine stage's
+    discipline), and merged options. Anything folding the same chunks
+    through the same setup reproduces the trajectory estimates bitwise.
+    """
+
+    names: Tuple[str, ...]
+    combiners: Dict[str, StreamingCombiner]
+    keys: Dict[str, jax.Array]  # name -> independent RNG stream
+    options: Dict[str, Any]  # merged spec.combiner_options over defaults
 
 
 class Scoreboard(NamedTuple):
@@ -379,6 +400,28 @@ class Pipeline:
 
     # -- stage 3b: combine-while-sampling ------------------------------------
 
+    def stream_setup(
+        self, names: Optional[Tuple[str, ...]] = None
+    ) -> StreamSetup:
+        """Resolve the streaming surfaces for ``names`` (default: the
+        spec's combiners) — see :class:`StreamSetup`. Fails fast on
+        unknown names."""
+        spec = self.spec
+        names = spec.combiner_names() if names is None else tuple(names)
+        scs: Dict[str, StreamingCombiner] = {}
+        for name in names:
+            get_combiner(name)  # fail fast on unknown names
+            scs[name] = get_streaming_combiner(name)
+        options = dict(
+            {"rescale": True, "n_batch": 1}, **dict(spec.combiner_options)
+        )
+        kc = jax.random.fold_in(self._key, 3)
+        k_names = {
+            name: jax.random.fold_in(kc, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+            for name in names
+        }
+        return StreamSetup(names, scs, k_names, options)
+
     def stream_combine(
         self,
         names: Optional[Tuple[str, ...]] = None,
@@ -435,19 +478,7 @@ class Pipeline:
                 "chunk cadence there is nothing to fold mid-run (set e.g. "
                 "stream_every=T//10, or use combine())"
             )
-        names = spec.combiner_names() if names is None else tuple(names)
-        scs = {}
-        for name in names:
-            get_combiner(name)  # fail fast on unknown names
-            scs[name] = get_streaming_combiner(name)
-        options = dict(
-            {"rescale": True, "n_batch": 1}, **dict(spec.combiner_options)
-        )
-        kc = jax.random.fold_in(self._key, 3)
-        k_names = {
-            name: jax.random.fold_in(kc, zlib.crc32(name.encode()) & 0x7FFFFFFF)
-            for name in names
-        }
+        names, scs, k_names, options = self.stream_setup(names)
 
         faces = {name: get_scan_face(name) for name in names}
         can_fuse = (
@@ -619,10 +650,15 @@ class Pipeline:
                 rows.append({
                     "t": t1, "combiner": name, "error": None, "elapsed_s": None,
                 })
-        jax.block_until_ready([s for _, _, s in estimates])
-        elapsed = time.time() - t_start  # one stamp: everything landed together
-        for row in rows:
-            row["elapsed_s"] = elapsed
+        # honest per-boundary stamps: each row's clock reads only after THAT
+        # row's estimate is device-complete, so elapsed_s is the row's true
+        # availability instant (monotone in landing order) — not one post-run
+        # stamp smeared across the trajectory. The fused program materializes
+        # estimates close together, so consecutive stamps may be near-equal;
+        # they are still each row's own wall-clock.
+        for row, (_, _, samples) in zip(rows, estimates):
+            jax.block_until_ready(samples)
+            row["elapsed_s"] = time.time() - t_start
 
         final: Dict[str, CombineResult] = {}
         for name in names:

@@ -54,6 +54,7 @@ fused end-to-end *and* keeps theta identical by construction.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Any, Callable, Dict, Iterator, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -87,6 +88,12 @@ class StreamChunk(NamedTuple):
     (latest) state and ``accept`` is zeroed. Subscribers that need per-chunk
     carry/acceptance must skip replayed chunks; the streaming combiners
     consume only ``theta``.
+
+    ``landed_s`` is the ``time.monotonic()`` instant the driver emitted the
+    chunk (replays stamp their re-emission, not the original landing) — the
+    honest per-boundary clock behind trajectory ``elapsed_s`` and the
+    serving layer's ``last_fold_monotonic_s`` staleness field. It is
+    metadata, not part of the bitwise-resume contract.
     """
 
     theta: jnp.ndarray  # (M, C, d) this chunk's draws
@@ -96,6 +103,7 @@ class StreamChunk(NamedTuple):
     total: int  # the run's T
     carry: Dict[str, jnp.ndarray]  # live driver state (restored if replayed)
     replayed: bool = False  # True when re-emitted from restored draws
+    landed_s: Optional[float] = None  # monotonic emission instant (metadata)
 
 
 # fused whole-run sampling programs: backend cache key + (T, chunk)
@@ -276,10 +284,12 @@ class ShardChainStream:
             t0, t_done = t_done, t1
             # emitted chunks leave the backend's device layout (mesh
             # sharding must not leak into subscriber/combiner numerics)
+            theta_l = self.backend.localize(theta_c)
+            acc_l = self.backend.localize(acc_c)
+            jax.block_until_ready(theta_l)  # honest landed_s: draws are real
             yield StreamChunk(
-                self.backend.localize(theta_c),
-                self.backend.localize(acc_c),
-                t0, t1, T, carry,
+                theta_l, acc_l, t0, t1, T, carry,
+                landed_s=time.monotonic(),
             )
 
 
@@ -464,6 +474,7 @@ def stream_sample(
                 ev = StreamChunk(
                     stream.backend.localize(carry["theta"][:, r0:r1]),
                     zeros, r0, r1, num_samples, carry, replayed=True,
+                    landed_s=time.monotonic(),
                 )
                 for sub in on_chunk:
                     sub(ev)

@@ -79,8 +79,11 @@ natively incremental for ``parametric``/``pool``/``subpost_average``/
 ``online``'s own registration), exact buffered fallback for the rest.
 Chunks are dense ``(M, C, d)`` per-machine slices; ``finalize`` on the
 buffered implementations is bitwise the batch combiner on the gathered
-stack. Consumers: ``Pipeline.stream_combine`` (combine-while-sampling) and
-``epmcmc.combine_stream`` (mesh chunked gather).
+stack. Consumers: ``Pipeline.stream_combine`` (combine-while-sampling),
+``epmcmc.combine_stream`` (mesh chunked gather), and the ``repro.serve``
+query layer. Mid-stream refreshes go through the optional ``estimate`` slot;
+:func:`streaming_estimate` resolves it with a typed
+:class:`EstimateUnavailable` for names that only finalize.
 
 Fused streaming (the scan face): names additionally resolve through
 :func:`get_scan_face` to an optional :class:`ScanStreamingFace` — the
@@ -96,6 +99,7 @@ from repro.core.combiners.api import (  # noqa: F401
     BufferState,
     Combiner,
     CombineResult,
+    EstimateUnavailable,
     ScanStreamingFace,
     StreamingCombiner,
     available_combiners,
@@ -115,6 +119,7 @@ from repro.core.combiners.api import (  # noqa: F401
     register_streaming,
     resolve_schedule,
     streaming_combiners,
+    streaming_estimate,
     valid_masks,
 )
 from repro.core.combiners.baselines import (  # noqa: F401

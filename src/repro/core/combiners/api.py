@@ -199,6 +199,44 @@ def get_streaming_combiner(name: str) -> StreamingCombiner:
     return buffered_streaming(get_combiner(name))
 
 
+class EstimateUnavailable(RuntimeError):
+    """A streaming combiner has no cheap mid-stream ``estimate``.
+
+    Raised by :func:`streaming_estimate` (and the serving layer) for names
+    that stream through the generic buffered fallback — re-running a heavy
+    batch combiner (weierstrass, rpt, semiparametric, ...) on the growing
+    buffer at every refresh would cost more than the gather path the stream
+    exists to beat. Carries the combiner name and a human-readable reason so
+    callers can surface a typed failure (``repro.serve`` maps it to a
+    503-with-reason) instead of a bare ``AttributeError``.
+    """
+
+    def __init__(self, combiner: str, reason: str):
+        self.combiner = combiner
+        self.reason = reason
+        super().__init__(f"{combiner}: {reason}")
+
+
+def streaming_estimate(name: str) -> Callable[..., "CombineResult"]:
+    """Resolve ``name`` to its streaming face's cheap ``estimate``.
+
+    The typed counterpart of ``get_streaming_combiner(name).estimate``:
+    names whose streaming form deliberately leaves ``estimate=None`` raise
+    :class:`EstimateUnavailable` (with the reason) rather than handing the
+    caller ``None`` to trip over.
+    """
+    sc = get_streaming_combiner(name)
+    if sc.estimate is None:
+        raise EstimateUnavailable(
+            name,
+            "no cheap mid-stream estimate: this combiner streams through "
+            "the buffered fallback and only finalizes (its batch body is "
+            "too heavy to re-run per refresh); query it after the stream "
+            "completes, or pick a combiner with a streaming estimate",
+        )
+    return sc.estimate
+
+
 def register_scan_face(name: str, face: ScanStreamingFace) -> ScanStreamingFace:
     """Attach a scan-compatible streaming face to a registered combiner
     ``name`` (propagates to its aliases, like :func:`register_streaming`)."""

@@ -155,8 +155,15 @@ def _finalize(
     return CombineResult(samples=draws, acceptance_rate=jnp.ones(()), moments=prod)
 
 
+# estimate IS finalize: sampling the moment product is already O(d²) — the
+# cheapest mid-stream snapshot any combiner has. Declaring it (rather than
+# leaving None-means-cheap implicit) lets trajectory consumers and the
+# serving layer treat `estimate is None` uniformly as "cannot refresh".
 ONLINE_STREAMING = StreamingCombiner(
-    init=online_init, update=online_update_chunk, finalize=_finalize
+    init=online_init,
+    update=online_update_chunk,
+    finalize=_finalize,
+    estimate=_finalize,
 )
 
 
@@ -177,16 +184,25 @@ def online(
     return _finalize(key, state, n_draws, jitter=jitter)
 
 
+def _online_scan_estimate(
+    key, state: OnlineMoments, n_draws: int, *, jitter: float = 1e-8, **_ignored
+) -> jnp.ndarray:
+    """In-scan trajectory draws: the same moment-product sample as the host
+    ``estimate``, as raw draws — traced into the fused combine-fold step."""
+    return sample_gaussian(key, online_product(state, jitter=jitter), n_draws)
+
+
 # Scan face (fused streaming): the host state already IS the scan state —
 # OnlineMoments pass through ``to_state`` untouched, and chunk folds run the
-# Pallas kernel. No ``estimate``: the host face has none either (finalize is
-# already cheap), so fused and subscriber streams emit identical (empty)
-# trajectory rows for ``online``.
+# Pallas kernel. The in-scan ``estimate`` mirrors the host one, so fused and
+# subscriber streams emit rows at the same boundaries (agreeing to Welford
+# merge-rounding — the kernel-vs-jnp fold tolerance documented above).
 ONLINE_SCAN = register_scan_face(
     "online",
     ScanStreamingFace(
         init=online_init,
         update=online_update_chunk_kernel,
         to_state=lambda scan_state, theta, counts: scan_state,
+        estimate=_online_scan_estimate,
     ),
 )

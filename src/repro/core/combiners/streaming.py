@@ -13,7 +13,9 @@ Attached to the registry via :func:`~repro.core.combiners.api.register_streaming
 
 ``pool`` / ``subpost_average``
     The union *is* the accumulated buffer, so the exact buffered adapter is
-    already their natural streaming form (bitwise finalize).
+    already their natural streaming form (bitwise finalize); their
+    ``estimate`` subsamples the buffer at even stride in O(n_draws) — the
+    rows the batch body would select, without replaying it.
 
 ``nonparametric``
     Chunk updates accumulate the per-machine KDE state — the mixture
@@ -38,6 +40,8 @@ after the scan, so their host ``estimate``/``finalize`` run unchanged.
 from __future__ import annotations
 
 from typing import NamedTuple
+
+import jax.numpy as jnp
 
 from repro.core.combiners.api import (
     BufferState,
@@ -135,24 +139,68 @@ PARAMETRIC_SCAN = register_scan_face(
 
 
 # ---------------------------------------------------------------------------
-# pool / subpostAvg: the buffered adapter IS the streaming form (exact).
-# Their finalize is elementwise-cheap (a gather/mean over the buffer), so it
-# doubles as the mid-stream estimate — unlike the generic fallback, which
-# deliberately leaves `estimate=None` so trajectory consumers don't re-run
-# heavy combiners (weierstrass, rpt, ...) on the growing buffer every chunk.
+# pool / subpostAvg: the buffered adapter IS the streaming form (exact), and
+# a genuinely cheap `estimate` reads O(n_draws) rows straight off the buffer
+# — unlike the generic fallback, which deliberately leaves `estimate=None`
+# so trajectory consumers (and the serving layer) don't re-run heavy
+# combiners (weierstrass, rpt, ...) on the growing buffer every refresh.
+# Historically `estimate` aliased `finalize`, which replays the full batch
+# body per call: pool materializes the whole M·t union (a payload that grows
+# with the stream) and subpostAvg gathers/averages every buffered row. Both
+# estimates below subsample FIRST, so a refresh costs O(n_draws·d) however
+# long the stream has run — the latency bound `repro.serve` readers sit on.
 # ---------------------------------------------------------------------------
 
 
-def _with_cheap_estimate(sc: StreamingCombiner) -> StreamingCombiner:
-    return sc._replace(estimate=sc.finalize)
+def _pool_estimate(key, state: BufferState, n_draws, **_ignored) -> CombineResult:
+    """Even-strided ``n_draws`` rows of the current union — elementwise the
+    rows ``pool``'s finalize would put at those indices (same ``m·t + r``
+    flattening, same ragged wrap), without materializing the M·t cloud."""
+    del key
+    theta, counts = state.theta, state.counts
+    M, t, _ = theta.shape
+    if t == 0:
+        raise ValueError("streaming estimate before any update() chunk")
+    total = M * t
+    if n_draws <= total:
+        flat = (jnp.arange(n_draws) * total) // n_draws
+    else:
+        flat = jnp.arange(n_draws) % total
+    m_idx, r_idx = flat // t, flat % t
+    r_idx = r_idx % jnp.maximum(counts[m_idx], 1)
+    return CombineResult(samples=theta[m_idx, r_idx], acceptance_rate=jnp.ones(()))
+
+
+def _subpost_avg_estimate(
+    key, state: BufferState, n_draws, **_ignored
+) -> CombineResult:
+    """subpostAvg at ``n_draws`` even-strided draw indices: gather the (M,
+    n_draws, d) slice (ragged wrap per machine) and average over machines —
+    bitwise the rows ``finalize``'s full gather-then-average would select,
+    since the mean over machines commutes with row selection."""
+    del key
+    theta, counts = state.theta, state.counts
+    M, t, _ = theta.shape
+    if t == 0:
+        raise ValueError("streaming estimate before any update() chunk")
+    if n_draws <= t:
+        idx = (jnp.arange(n_draws) * t) // n_draws
+    else:
+        idx = jnp.arange(n_draws) % t
+    rows = idx[None, :] % jnp.maximum(counts[:, None], 1)  # (M, n_draws)
+    sel = jnp.take_along_axis(theta, rows[:, :, None], axis=1)
+    return CombineResult(samples=jnp.mean(sel, axis=0), acceptance_rate=jnp.ones(()))
 
 
 POOL_STREAMING = register_streaming(
-    "pool", _with_cheap_estimate(buffered_streaming(pool_combiner))
+    "pool",
+    buffered_streaming(pool_combiner)._replace(estimate=_pool_estimate),
 )
 SUBPOST_AVERAGE_STREAMING = register_streaming(
     "subpost_average",
-    _with_cheap_estimate(buffered_streaming(subpost_average_combiner)),
+    buffered_streaming(subpost_average_combiner)._replace(
+        estimate=_subpost_avg_estimate
+    ),
 )
 
 

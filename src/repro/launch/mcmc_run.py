@@ -28,6 +28,12 @@ paper's "embarrassingly parallel" claim, machine-checked per run. Since the
 ``--stream-every`` and ``--checkpoint-dir``: chunk programs run on the mesh
 and every chunk program's HLO is asserted the same way.
 
+``--serve`` runs the same Pipeline behind the :mod:`repro.serve` posterior
+server: sampling streams chunks into the folder task while concurrent
+readers (``--serve-readers`` self-probes, plus any external
+``repro.serve.ServeClient``) query mean/cov, quantiles, predictive draws,
+and machine-KDE log density with staleness metadata on every response.
+
 The sampling engine itself lives in :mod:`repro.api.sampling`; the historical
 module-level names (``make_shard_sampler``, ``sample_subposteriors``,
 ``groundtruth_chain``, ``SampleResult``) are re-exported here with a
@@ -160,6 +166,23 @@ def main(argv=None) -> dict:
         "with --stream-every and --checkpoint-dir via the mesh chunk "
         "backend (default: auto-mesh when >1 device divides M)",
     )
+    ap.add_argument(
+        "--serve", action="store_true",
+        help="posterior-as-a-service: run sampling behind a repro.serve "
+        "asyncio server (needs --stream-every) and answer posterior "
+        "queries while the chains extend; composes with --checkpoint-dir "
+        "(restart resumes from the last checkpoint)",
+    )
+    ap.add_argument(
+        "--serve-port", type=int, default=0,
+        help="TCP port for --serve (0 = ephemeral, printed at startup)",
+    )
+    ap.add_argument(
+        "--serve-readers", type=int, default=4,
+        help="concurrent self-probe readers cycling posterior queries "
+        "during --serve (each asserts staleness counters monotone — the "
+        "CI smoke contract); 0 = serve without probing",
+    )
     args = ap.parse_args(argv)
 
     pipe = Pipeline(
@@ -167,7 +190,17 @@ def main(argv=None) -> dict:
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every,
     )
-    if args.stream_every > 0:
+    if args.serve:
+        if args.stream_every <= 0:
+            ap.error("--serve needs --stream-every > 0 (the serving cadence)")
+        from repro.serve import serve_pipeline
+
+        serve_pipeline(
+            pipe, port=args.serve_port, probe_readers=args.serve_readers
+        )
+        # sampling is complete (and cached on the Pipeline): fall through to
+        # the ordinary combine+score scoreboard over the served draws
+    elif args.stream_every > 0:
         sr = pipe.stream_combine()
         first = sr.trajectory[0] if sr.trajectory else None
         if first is not None:

@@ -142,6 +142,62 @@ def test_streaming_finalize_before_update_raises():
         sc.finalize(jax.random.PRNGKey(0), sc.init(M, D), 16)
 
 
+def test_pool_estimate_is_strided_union_subsample(cloud):
+    """Satellite: pool's cheap estimate returns exactly n_draws even-strided
+    rows of the union its finalize materializes — O(n_draws), not O(M·t)."""
+    sc = get_streaming_combiner("pool")
+    state = buffer_append(buffer_init(M, D), cloud)
+    key = jax.random.PRNGKey(1)
+    est = sc.estimate(key, state, 32)
+    assert est.samples.shape == (32, D)
+    full = sc.finalize(key, state, 32).samples  # the whole M·T union
+    idx = (jnp.arange(32) * full.shape[0]) // 32
+    np.testing.assert_array_equal(np.asarray(est.samples), np.asarray(full[idx]))
+
+
+def test_subpost_average_estimate_matches_finalize_rows(cloud):
+    """Satellite: subpostAvg's cheap estimate (subsample-then-average) is
+    bitwise the rows its full gather-then-average finalize selects — the
+    mean over machines commutes with row selection."""
+    sc = get_streaming_combiner("subpost_average")
+    state = buffer_append(buffer_init(M, D), cloud)
+    key = jax.random.PRNGKey(1)
+    est = sc.estimate(key, state, 32)
+    fin = sc.finalize(key, state, 32)
+    np.testing.assert_array_equal(np.asarray(est.samples), np.asarray(fin.samples))
+
+
+def test_online_streaming_face_has_cheap_estimate(cloud):
+    """Satellite: the never-buffers combiner can refresh mid-stream on both
+    faces (host estimate = the O(d²) moment-product sample; scan face ships
+    the in-scan counterpart), so the server answers on it too."""
+    from repro.core.combiners import get_scan_face
+
+    sc = get_streaming_combiner("online")
+    assert sc.estimate is not None
+    assert get_scan_face("online").estimate is not None
+    state = online_update_chunk(online_init(M, D), cloud)
+    est = sc.estimate(jax.random.PRNGKey(2), state, 16)
+    assert est.samples.shape == (16, D)
+    # estimate and finalize are the same O(d²) snapshot for online
+    fin = sc.finalize(jax.random.PRNGKey(2), state, 16)
+    np.testing.assert_array_equal(np.asarray(est.samples), np.asarray(fin.samples))
+
+
+def test_streaming_estimate_resolution_is_typed():
+    """Satellite: names that genuinely can't estimate raise the typed
+    EstimateUnavailable (what repro.serve maps to a 503-with-reason), not a
+    bare None/AttributeError."""
+    from repro.core.combiners import EstimateUnavailable, streaming_estimate
+
+    assert streaming_estimate("parametric") is not None
+    for name in ("consensus", "weierstrass", "rpt"):
+        with pytest.raises(EstimateUnavailable) as exc:
+            streaming_estimate(name)
+        assert exc.value.combiner == name
+        assert "estimate" in exc.value.reason
+
+
 # ---------------------------------------------------------------------------
 # Pipeline.stream_combine: combine-while-sampling
 # ---------------------------------------------------------------------------
@@ -203,6 +259,19 @@ def test_stream_trajectory_shape_and_monotone_t(streamed):
         # wandering: its best estimate isn't wildly above the final error
         assert min(errs) < 4.0 * abs(board[name]) + 4.0, (name, errs)
     assert all(r["elapsed_s"] >= 0 for r in sr.trajectory)
+
+
+def test_stream_trajectory_elapsed_is_per_row_and_monotone(streamed):
+    """Satellite (bugfix): elapsed_s must be an honest per-boundary stamp in
+    BOTH modes — monotone non-decreasing in landing order, never one
+    post-run stamp smeared backwards over the trajectory. The fixture runs
+    the fused path (every STREAM_SPECS combiner has a scan face); the
+    subscriber run is forced here."""
+    spec, _, sr_fused = streamed
+    for sr in (sr_fused, Pipeline(spec).stream_combine(n_estimate=32, fused=False)):
+        stamps = [r["elapsed_s"] for r in sr.trajectory]
+        assert stamps == sorted(stamps)
+        assert all(s > 0 for s in stamps)
 
 
 def test_fallback_combiners_fold_but_skip_mid_stream_rows(streamed):
